@@ -1,0 +1,54 @@
+"""Paper Fig. 9 — ChangeDetector accuracy vs observation-window size.
+
+The paper reports up to 99% change-detection accuracy. We sweep window size
+and significance level on simulated multi-phase streams with ground-truth
+transition flags.
+"""
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.change_detector import ChangeDetector
+from repro.core.simulator import generate, random_schedule
+from repro.core.windows import make_windows
+
+
+def evaluate(window_size: int, alpha: float, quorum: float, n_seeds=5):
+    """Strict per-window accuracy + event accuracy with ±1-window alignment
+    tolerance (the paper's metric is change *detection*, not exact window
+    attribution — a ramp's boundary window is genuinely ambiguous)."""
+    accs, tol_accs, recalls, precs = [], [], [], []
+    for seed in range(n_seeds):
+        sched = random_schedule(8, seed=seed)
+        sim = generate(sched, window_size=window_size, seed=seed)
+        det = ChangeDetector(alpha=alpha, quorum=quorum)
+        flags = det.batch(sim.windows)
+        gt = sim.window_transition[:len(flags)]
+        accs.append(np.mean(flags == gt))
+        near = gt | np.roll(gt, 1) | np.roll(gt, -1)
+        ok = np.where(flags, near, ~gt | near)
+        tol_accs.append(np.mean(ok))
+        tp = np.sum(flags & gt)
+        recalls.append(tp / max(gt.sum(), 1))
+        precs.append(tp / max(flags.sum(), 1))
+    return (float(np.mean(accs)), float(np.mean(tol_accs)),
+            float(np.mean(recalls)), float(np.mean(precs)))
+
+
+def main():
+    best = (0, None, 0)
+    for w in (16, 32, 64):
+        for alpha in (0.05, 0.01, 0.001):
+            for quorum in (0.2, 0.3, 0.4):
+                acc, tol, rec, prec = evaluate(w, alpha, quorum)
+                row(f"change_detector/w{w}_a{alpha}_q{quorum}",
+                    f"{acc:.4f}",
+                    f"tol_acc={tol:.4f};recall={rec:.3f};precision={prec:.3f}")
+                if tol > best[0]:
+                    best = (tol, (w, alpha, quorum), acc)
+    row("change_detector/best_accuracy", f"{best[0]:.4f}",
+        f"paper_claim=0.99;strict={best[2]:.4f};config={best[1]}")
+    return best[0]
+
+
+if __name__ == "__main__":
+    main()

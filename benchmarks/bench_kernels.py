@@ -1,0 +1,54 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU — correctness surrogate)
+vs the XLA reference path, plus the XLA path's own us/call as the meaningful
+CPU number. On TPU the pallas path compiles via Mosaic."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.kernels import ref as R
+from repro.kernels.pairdist import pairdist
+from repro.models.layers import attention_xla
+from repro.models.mamba2 import ssd_chunked
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    # attention XLA path (the dry-run/compile path)
+    for (B, S, H, K, d) in [(1, 512, 4, 2, 64), (1, 1024, 8, 2, 64)]:
+        ks = jax.random.split(key, 3)
+        q = jax.random.normal(ks[0], (B, S, H, d), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, K, d), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, K, d), jnp.float32)
+        fn = jax.jit(lambda q, k, v: attention_xla(
+            q, k, v, q_pos=jnp.arange(S), kv_pos=jnp.arange(S), q_chunk=256))
+        _, us = timed(fn, q, k, v)
+        flops = 4 * B * H * S * S * d
+        row(f"kernel/attention_xla_S{S}", f"{us:.0f}us",
+            f"gflops={flops/us*1e-3:.2f}")
+
+    # SSD chunked scan (XLA path)
+    for (B, S, H, P, N) in [(1, 1024, 8, 32, 32)]:
+        ks = jax.random.split(key, 5)
+        x = jax.random.normal(ks[0], (B, S, H, P))
+        dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+        A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+        Bm = jax.random.normal(ks[3], (B, S, 1, N)) * 0.3
+        Cm = jax.random.normal(ks[4], (B, S, 1, N)) * 0.3
+        fn = jax.jit(lambda *a: ssd_chunked(*a, 128)[0])
+        _, us = timed(fn, x, dt, A, Bm, Cm)
+        row(f"kernel/ssd_xla_S{S}", f"{us:.0f}us", "")
+
+    # pairdist: pallas interpret vs ref (KERMIT discovery hot-spot)
+    x = jax.random.normal(key, (512, 16))
+    fn_ref = jax.jit(R.ref_pairdist)
+    _, us_ref = timed(fn_ref, x)
+    row("kernel/pairdist_ref_N512", f"{us_ref:.0f}us", "")
+    _, us_pal = timed(lambda x: pairdist(x, interpret=True), x)
+    row("kernel/pairdist_pallas_interp_N512", f"{us_pal:.0f}us",
+        "interpret-mode (CPU correctness path)")
+    return us_ref
+
+
+if __name__ == "__main__":
+    main()

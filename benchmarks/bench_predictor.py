@@ -1,0 +1,33 @@
+"""Paper claim — WorkloadPredictor (LSTM) predicts future workload type with
+up to 96% accuracy (t+1) on recurring schedules (the paper's motivating
+daily/hourly repeated jobs). Also reports a harder aperiodic control.
+"""
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.lstm import PredictorConfig, WorkloadPredictor
+
+
+def main():
+    # recurring business schedule: [ingest, train, eval, serve] repeated with
+    # occasional double-serve (like a long nightly window)
+    base = [0, 1, 1, 2, 3, 3]
+    seq = np.array((base * 80)[:480])
+    pc = PredictorConfig(n_classes=4, hidden=48, window=8, epochs=50)
+    p = WorkloadPredictor(pc).fit(seq[:320])       # train on the past...
+    s = p.score(seq[300:])                         # ...predict the future
+    for h, acc in sorted(s.items()):
+        row(f"predictor/periodic_t+{h}", f"{acc:.4f}",
+            "paper_claim_t+1<=0.96")
+
+    # aperiodic control: random labels — accuracy should fall to ~chance
+    rng = np.random.default_rng(0)
+    rnd = rng.integers(0, 4, 480)
+    p2 = WorkloadPredictor(pc).fit(rnd[:320])
+    s2 = p2.score(rnd[300:])
+    row("predictor/random_control_t+1", f"{s2[1]:.4f}", "chance=0.25")
+    return s[1]
+
+
+if __name__ == "__main__":
+    main()

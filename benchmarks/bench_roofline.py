@@ -1,0 +1,52 @@
+"""Roofline table from the dry-run artifacts (deliverable g): per
+(arch × shape × mesh) the three terms, the bottleneck, and the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs × chips)."""
+import json
+from pathlib import Path
+
+from benchmarks.common import row
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_cells(mesh: str):
+    out = []
+    d = DRYRUN / mesh
+    if not d.exists():
+        return out
+    for f in sorted(d.glob("*.json")):
+        if "__opt" in f.name or "__hc" in f.name:
+            continue
+        rec = json.loads(f.read_text())
+        if "error" not in rec:
+            out.append(rec)
+    return out
+
+
+def main():
+    for mesh in ("16x16", "2x16x16"):
+        cells = load_cells(mesh)
+        if not cells:
+            row(f"roofline/{mesh}", "MISSING",
+                "run: python -m repro.launch.dryrun --all --both-meshes")
+            continue
+        worst = None
+        for rec in cells:
+            r = rec["roofline"]
+            name = f"roofline/{mesh}/{rec['arch']}/{rec['shape']}"
+            total = max(r["compute_s"], r["memory_s"], r["collective_s"])
+            frac = r["compute_s"] / max(total, 1e-12)
+            row(name, f"{total * 1e3:.2f}ms",
+                f"bottleneck={r['bottleneck']};compute={r['compute_s']*1e3:.2f}ms;"
+                f"memory={r['memory_s']*1e3:.2f}ms;"
+                f"coll={r['collective_s']*1e3:.2f}ms;"
+                f"useful={r['useful_ratio']:.3f};roofline_frac={frac:.3f}")
+            if worst is None or frac < worst[0]:
+                worst = (frac, name)
+        row(f"roofline/{mesh}/cells", len(cells),
+            f"worst_roofline_frac={worst[0]:.3f} at {worst[1]}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Fig. 7 — TransitionClassifier performance.
+
+Transitions are classified on rate-of-change features (training-pipeline
+step 5). Two tasks: (a) transition-vs-steady detection; (b) transition-TYPE
+classification (which (from -> to) pair), with auto-generated labels.
+"""
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.forest import ForestConfig, RandomForest
+from repro.core.simulator import generate
+from repro.core.windows import rate_of_change
+
+PAIRS = [("dense_train", "decode_serve"), ("decode_serve", "dense_train"),
+         ("dense_train", "long_prefill"), ("long_prefill", "moe_train"),
+         ("moe_train", "dense_train")]
+
+
+def _dataset(seed):
+    X, y_bin, y_type = [], [], []
+    for ti, (a, b) in enumerate(PAIRS):
+        for rep in range(4):
+            sim = generate([(a, 6), (b, 6)], window_size=24,
+                           transition_windows=2, seed=seed + 31 * ti + rep)
+            roc = rate_of_change(sim.windows.mean)
+            trans = sim.window_transition
+            X.append(roc)
+            y_bin.append(trans.astype(np.int64))
+            t = np.full(len(roc), -1)
+            t[trans] = ti
+            y_type.append(t)
+    return (np.concatenate(X).astype(np.float32), np.concatenate(y_bin),
+            np.concatenate(y_type))
+
+
+def main():
+    Xtr, btr, ttr = _dataset(seed=100)
+    Xte, bte, tte = _dataset(seed=900)
+
+    det = RandomForest(ForestConfig(n_trees=16, depth=5, n_classes=2))
+    det.fit(Xtr, btr)
+    acc_bin = float(np.mean(det.predict(Xte) == bte))
+    row("transition/binary_accuracy", f"{acc_bin:.4f}", "paper_fig7")
+
+    m_tr, m_te = ttr >= 0, tte >= 0
+    clf = RandomForest(ForestConfig(n_trees=24, depth=6,
+                                    n_classes=len(PAIRS)))
+    clf.fit(Xtr[m_tr], ttr[m_tr])
+    acc_type = float(np.mean(clf.predict(Xte[m_te]) == tte[m_te]))
+    row("transition/type_accuracy", f"{acc_type:.4f}",
+        f"classes={len(PAIRS)};paper_fig7")
+    return acc_bin
+
+
+if __name__ == "__main__":
+    main()

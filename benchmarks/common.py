@@ -1,0 +1,23 @@
+"""Shared benchmark helpers. Output convention: ``name,value,derived`` CSV
+rows (value = primary metric, derived = context like the paper's number)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def row(name: str, value, derived: str = ""):
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    import jax
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return out, min(ts) * 1e6          # us

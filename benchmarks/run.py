@@ -1,0 +1,42 @@
+# One benchmark per paper table/figure/claim. Prints ``name,value,derived``
+# CSV rows (see DESIGN.md §7 for the figure -> benchmark index).
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_change_detector, bench_classifiers,
+                            bench_clustering, bench_transition,
+                            bench_predictor, bench_zsl, bench_kernels,
+                            bench_roofline, bench_explorer,
+                            bench_autonomic_e2e)
+    suites = [
+        ("change_detector[fig9]", bench_change_detector),
+        ("classifiers[fig6]", bench_classifiers),
+        ("clustering[fig10]", bench_clustering),
+        ("transition[fig7]", bench_transition),
+        ("predictor[claim96]", bench_predictor),
+        ("zsl[claim83]", bench_zsl),
+        ("kernels", bench_kernels),
+        ("roofline[deliverable-g]", bench_roofline),
+        ("explorer[claims 30%/92.5%]", bench_explorer),
+        ("autonomic_e2e", bench_autonomic_e2e),
+    ]
+    failures = 0
+    for name, mod in suites:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,", flush=True)
+            traceback.print_exc()
+        print(f"# {name} took {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

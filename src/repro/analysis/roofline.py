@@ -1,0 +1,143 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants):
+  compute    = per-device HLO FLOPs / 197e12
+  memory     = per-device HLO bytes-accessed / 819e9
+  collective = per-device collective payload bytes / 50e9  (1 effective link,
+               conservative; factors below approximate ring algorithms)
+
+collective bytes are NOT in cost_analysis(): we parse the post-partitioning
+HLO text and sum payload estimates of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, using the per-device result
+shapes (the compiled module is the per-device program) and replica-group
+sizes.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+LINK_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "tuple": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^\s]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", re.M)
+
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _tuple_bytes(spec: str) -> int:
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", spec):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device payload bytes by collective kind."""
+    out = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0}
+    for m in _COLL_RE.finditer(hlo_text):
+        tup, dtype, dims, op = m.groups()
+        size = _tuple_bytes(tup) if tup else _shape_bytes(dtype, dims)
+        # replica group size for the ring factors — same line only
+        eol = hlo_text.find("\n", m.end())
+        tail = hlo_text[m.end():eol if eol != -1 else m.end() + 400]
+        g = 0
+        gm = _GROUPS_RE.search(tail)
+        if gm:
+            g = gm.group(1).count(",") + 1
+        else:
+            gm = _GROUPS_IOTA_RE.search(tail)
+            if gm:
+                g = int(gm.group(2))
+        g = max(g, 2)
+        if op == "all-reduce":
+            size *= 2.0 * (g - 1) / g
+        elif op == "reduce-scatter":
+            size *= (g - 1)          # result is the shard; sends (g-1) shards
+        elif op in ("all-gather", "all-to-all"):
+            size *= (g - 1) / g
+        out[op] += size
+    out["total"] = sum(out.values())
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float
+    useful_ratio: float               # MODEL_FLOPS / (HLO_FLOPs * chips)
+
+    def as_dict(self):
+        return asdict(self)
+
+
+def roofline_terms(cost: dict, coll: dict, *, chips: int,
+                   model_flops: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    cb = float(coll.get("total", 0.0))
+    terms = {"compute": flops / PEAK_FLOPS, "memory": byts / HBM_BW,
+             "collective": cb / LINK_BW}
+    bn = max(terms, key=terms.get)
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes_per_device=cb,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], bottleneck=bn,
+        model_flops=model_flops,
+        useful_ratio=model_flops / max(flops * chips, 1.0),
+    )
+
+
+def count_params(shapes_tree, cfg) -> tuple[float, float]:
+    """(N_total, N_active) from an abstract param tree; MoE expert tensors
+    scale by (top_k + shared)/num_experts for the active count."""
+    import jax
+    total = active = 0.0
+    def names_of(path):
+        return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes_tree)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        names = names_of(path)
+        total += n
+        if cfg.moe is not None and "moe" in names and \
+                names[-1] in ("wi", "wg", "wo") and "shared" not in names \
+                and "dense" not in names:
+            active += n * cfg.moe.top_k / cfg.moe.num_experts
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, shape, n_active: float) -> float:
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    per_tok = 6.0 if shape.kind == "train" else 2.0
+    return per_tok * n_active * tokens

@@ -1,0 +1,4 @@
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, ShapeSpec,
+                                SHAPES, Tunables, DEFAULT_TUNABLES, supports,
+                                reduced)
+from repro.configs.registry import ARCHS, get_config, get_shape, all_cells

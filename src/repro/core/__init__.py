@@ -1,0 +1,21 @@
+"""KERMIT core: the paper's autonomic architecture in JAX.
+
+On-line:  monitor (KWmon), change_detector, plugin (KPlg, Algorithm 1),
+          explorer (config search), lstm (WorkloadPredictor).
+Off-line: analyser (KWanl, Algorithm 2 + training pipeline), dbscan,
+          characterize, forest, synthesizer (ZSL).
+Knowledge: knowledge (WorkloadDB). Substrate: windows, simulator.
+"""
+from repro.core.windows import FEATURES, NUM_FEATURES, WindowSeries, make_windows
+from repro.core.change_detector import ChangeDetector, welch_t
+from repro.core.dbscan import dbscan, kmeans
+from repro.core.characterize import characterize, l2_drift
+from repro.core.forest import RandomForest, ForestConfig
+from repro.core.lstm import WorkloadPredictor, PredictorConfig
+from repro.core.synthesizer import synthesize, sample_pure
+from repro.core.explorer import Explorer, DEFAULT_SPACE
+from repro.core.knowledge import WorkloadDB, WorkloadRecord, UNKNOWN
+from repro.core.monitor import KermitMonitor, WorkloadContext
+from repro.core.analyser import KermitAnalyser, AnalysisReport
+from repro.core.plugin import KermitPlugin
+from repro.core.autonomic import AutonomicManager

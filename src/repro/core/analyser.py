@@ -1,0 +1,148 @@
+"""KWanl — the off-line (batch) analysis subsystem.
+
+Implements paper Algorithm 2 + the automated training pipeline (§7):
+  1. ChangeDetector.batch flags transition windows
+  2. transitions are filtered out; DBSCAN discovers workload clusters
+  3. clusters are characterized and matched against WorkloadDB (Welch);
+     matches update characterizations + drift flags, novelties get fresh
+     integer labels — labelling needs no human
+  4. training sets are generated: windows->labels (WorkloadClassifier),
+     rate-of-change transition windows (TransitionClassifier), synthesized
+     hybrids (ZSL), label sequences (WorkloadPredictor)
+  5. classifiers are (re)trained
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.change_detector import ChangeDetector
+from repro.core.characterize import characterize
+from repro.core.dbscan import dbscan
+from repro.core.forest import ForestConfig, RandomForest
+from repro.core.knowledge import WorkloadDB
+from repro.core.lstm import PredictorConfig, WorkloadPredictor
+from repro.core.synthesizer import sample_pure, synthesize
+from repro.core.windows import WindowSeries, rate_of_change
+
+
+@dataclass
+class AnalysisReport:
+    n_windows: int = 0
+    n_transition_windows: int = 0
+    clusters: int = 0
+    new_labels: list = field(default_factory=list)
+    matched_labels: list = field(default_factory=list)
+    drifted_labels: list = field(default_factory=list)
+    window_labels: Optional[np.ndarray] = None   # per-window DB label (-1 noise)
+
+
+class KermitAnalyser:
+    def __init__(self, db: WorkloadDB, *,
+                 detector: Optional[ChangeDetector] = None,
+                 dbscan_eps: float = 0.35, dbscan_min_pts: int = 4,
+                 max_classes: int = 64):
+        self.db = db
+        self.detector = detector or ChangeDetector()
+        self.eps = dbscan_eps
+        self.min_pts = dbscan_min_pts
+        self.max_classes = max_classes
+        self.classifier: Optional[RandomForest] = None
+        self.transition_classifier: Optional[RandomForest] = None
+        self.predictor: Optional[WorkloadPredictor] = None
+
+    # -- Algorithm 2 ----------------------------------------------------------
+
+    def discover(self, ws: WindowSeries) -> AnalysisReport:
+        rep = AnalysisReport(n_windows=len(ws))
+        trans = self.detector.batch(ws)
+        rep.n_transition_windows = int(trans.sum())
+        steady_idx = np.where(~trans)[0]
+        if steady_idx.size == 0:
+            return rep
+        X = ws.mean[steady_idx]
+        labels = dbscan(X, self.eps, self.min_pts)
+        rep.clusters = int(labels.max() + 1) if labels.size else 0
+
+        window_labels = np.full(len(ws), -1, np.int64)
+        for c in range(rep.clusters):
+            members = steady_idx[labels == c]
+            char = characterize(ws.mean[members])
+            match = self.db.find_match(char)
+            if match is not None:
+                drift = self.db.observe(match, char)
+                rep.matched_labels.append(match)
+                if drift:
+                    rep.drifted_labels.append(match)
+                window_labels[members] = match
+            else:
+                new = self.db.insert(char)
+                rep.new_labels.append(new)
+                window_labels[members] = new
+        rep.window_labels = window_labels
+        self.db.save()
+        return rep
+
+    # -- training pipeline (§7.2 steps 1-9) ------------------------------------
+
+    def train(self, ws: WindowSeries, rep: AnalysisReport, *,
+              synthesize_hybrids: bool = True, seed: int = 0,
+              predictor_cfg: Optional[PredictorConfig] = None,
+              forest_cfg: Optional[ForestConfig] = None):
+        wl = rep.window_labels
+        if wl is None or (wl >= 0).sum() == 0:
+            return self
+        mask = wl >= 0
+        X = ws.mean[mask]
+        y = wl[mask]
+
+        # step 7: ZSL synthesis from pure characterizations
+        if synthesize_hybrids:
+            pure = self.db.pure_characterizations()
+            Xs, ys, hybrids = synthesize(
+                pure, n_per_class=100, seed=seed,
+                next_label=self.db._next_label)
+            for h in hybrids:
+                self.db.insert(h.prototype, is_synthetic=True, pair=h.pair,
+                               label=h.label)
+            Xb, yb = sample_pure(pure, n_per_class=100, seed=seed + 1)
+            if Xs.size:
+                X = np.concatenate([X, Xb, Xs])
+                y = np.concatenate([y, yb, ys])
+
+        n_classes = int(max(self.db.labels(), default=0)) + 1
+        fc = forest_cfg or ForestConfig(n_trees=24, depth=6,
+                                        n_classes=min(n_classes,
+                                                      self.max_classes))
+        self.classifier = RandomForest(fc).fit(X, y, seed=seed)
+
+        # transition classifier on rate-of-change features
+        roc = rate_of_change(ws.mean)
+        ty = (wl < 0).astype(np.int64)       # 1 = transition/noise window
+        tfc = ForestConfig(n_trees=16, depth=5, n_classes=2)
+        self.transition_classifier = RandomForest(tfc).fit(roc, ty, seed=seed)
+
+        # predictor on the label sequence (steady windows carry labels;
+        # transitions inherit the previous label for sequence continuity)
+        seq = wl.copy()
+        for i in range(1, len(seq)):
+            if seq[i] < 0:
+                seq[i] = seq[i - 1]
+        if seq[0] < 0:
+            first = seq[seq >= 0]
+            seq[0] = first[0] if first.size else 0
+        pc = predictor_cfg or PredictorConfig(
+            n_classes=max(int(seq.max()) + 1, 2), epochs=30)
+        try:
+            self.predictor = WorkloadPredictor(pc).fit(seq, seed=seed)
+        except ValueError:
+            self.predictor = None            # sequence too short
+        self.db.save()
+        return self
+
+    def run(self, ws: WindowSeries, **kw) -> AnalysisReport:
+        rep = self.discover(ws)
+        self.train(ws, rep, **kw)
+        return rep

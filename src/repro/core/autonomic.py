@@ -1,0 +1,114 @@
+"""AutonomicManager — the assembled MAPE-K loop (paper Fig. 3).
+
+Monitor:  KermitMonitor ingests step telemetry (KAgnt/KPlg streams).
+Analyze:  ChangeDetector on-line; KermitAnalyser (KWanl) batch discovery +
+          classifier training every ``analysis_interval`` windows.
+Plan:     KermitPlugin (Algorithm 1) decides reuse / local / global search.
+Execute:  the caller applies the returned Tunables (re-jit of the step).
+Knowledge: WorkloadDB persists across runs — labels are never deleted.
+
+The manager is deliberately framework-facing: ``step(telemetry_sample,
+objective)`` is the only thing a training/serving loop must call.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.configs.base import DEFAULT_TUNABLES, Tunables
+from repro.core.analyser import KermitAnalyser
+from repro.core.change_detector import ChangeDetector
+from repro.core.explorer import Explorer
+from repro.core.knowledge import WorkloadDB
+from repro.core.monitor import KermitMonitor
+from repro.core.plugin import KermitPlugin
+
+
+@dataclass
+class AutonomicEvent:
+    window_id: int
+    kind: str            # "transition" | "analysis" | "retune" | "steady"
+    label: int
+    tunables: Optional[dict] = None
+    detail: dict = field(default_factory=dict)
+
+
+class AutonomicManager:
+    def __init__(self, *, root: str | Path | None = None,
+                 window_size: int = 16,
+                 analysis_interval: int = 24,
+                 detector: Optional[ChangeDetector] = None,
+                 explorer: Optional[Explorer] = None,
+                 default: Tunables = DEFAULT_TUNABLES,
+                 dbscan_eps: float = 0.35,
+                 drift_eps: float = 1.0):
+        self.db = WorkloadDB(root, drift_eps=drift_eps)
+        det = detector or ChangeDetector()
+        self.monitor = KermitMonitor(window_size=window_size, detector=det,
+                                     root=root)
+        self.analyser = KermitAnalyser(self.db, detector=det,
+                                       dbscan_eps=dbscan_eps)
+        self.plugin = KermitPlugin(self.db, self.monitor,
+                                   explorer or Explorer(), default)
+        self.analysis_interval = analysis_interval
+        self.current = default
+        self._last_label = None
+        self._since_analysis = 0
+        self.events: list[AutonomicEvent] = []
+
+    # -- the single integration point -----------------------------------------
+
+    def step(self, sample, objective: Callable[[Tunables], float]
+             ) -> Tunables:
+        """Feed one telemetry sample; returns the Tunables the managed system
+        should run with (changes only at window boundaries)."""
+        ctx = self.monitor.ingest(sample)
+        if ctx is None:
+            return self.current
+        self._since_analysis += 1
+
+        # off-line subsystem cadence (A of MAPE-K)
+        if self._since_analysis >= self.analysis_interval:
+            self._since_analysis = 0
+            ws = self.monitor.window_series()
+            if ws is not None and len(ws) >= 8:
+                rep = self.analyser.run(ws)
+                self.monitor.classifier = self.analyser.classifier
+                self.monitor.predictor = self.analyser.predictor
+                self.events.append(AutonomicEvent(
+                    ctx.window_id, "analysis", ctx.current_label,
+                    detail={"clusters": rep.clusters,
+                            "new": rep.new_labels,
+                            "drifted": rep.drifted_labels}))
+
+        # plan/execute at workload boundaries (label change or fresh optimum)
+        label = ctx.current_label
+        if ctx.in_transition:
+            self.events.append(AutonomicEvent(ctx.window_id, "transition",
+                                              label))
+        if label != self._last_label and not ctx.in_transition:
+            tun = self.plugin.on_resource_request(objective)
+            if tun != self.current:
+                self.events.append(AutonomicEvent(
+                    ctx.window_id, "retune", label,
+                    tunables=tun.as_dict()))
+            self.current = tun
+            self._last_label = label
+        return self.current
+
+    # -- reporting -------------------------------------------------------------
+
+    def summary(self) -> dict:
+        s = self.plugin.stats
+        return {
+            "windows": self.monitor._window_id,
+            "known_workloads": len([r for r in self.db.records.values()
+                                    if not r.is_synthetic]),
+            "anticipated_hybrids": len([r for r in self.db.records.values()
+                                        if r.is_synthetic]),
+            "plugin": vars(s).copy(),
+            "events": len(self.events),
+        }

@@ -1,0 +1,86 @@
+"""ChangeDetector: Welch's t-test steady-state vs transition classifier.
+
+The paper's ChangeDetector is a statistical binary classifier requiring no
+training: neighbouring observation windows are compared per-feature with
+Welch's unequal-variance t-test; a window is a *transition* when the fraction
+of significantly-changed features exceeds a quorum. The same routine runs
+on-line (pairwise stream) and in batch (vectorized over a window series), and
+off-line as the WorkloadDB characterization matcher (Algorithm 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.windows import WindowSeries
+
+
+def welch_t(mean1, var1, n1, mean2, var2, n2):
+    """Per-feature Welch t statistic and Welch–Satterthwaite dof."""
+    v1 = var1 / n1
+    v2 = var2 / n2
+    denom = jnp.sqrt(jnp.maximum(v1 + v2, 1e-12))
+    t = (mean1 - mean2) / denom
+    dof = jnp.square(v1 + v2) / jnp.maximum(
+        v1 * v1 / max(n1 - 1, 1) + v2 * v2 / max(n2 - 1, 1), 1e-12)
+    return t, dof
+
+
+def _t_crit(dof, alpha: float):
+    """Two-sided critical value; normal-approx with small-dof inflation
+    (Cornish–Fisher-style), avoiding a scipy dependency."""
+    # z for two-sided alpha: alpha .05->1.96, .01->2.576, .001->3.29
+    z = jnp.sqrt(2.0) * _erfinv(1.0 - alpha)
+    return z * (1.0 + (z * z + 1.0) / (4.0 * jnp.maximum(dof, 1.0)))
+
+
+def _erfinv(x):
+    # Winitzki approximation — adequate for critical-value use
+    a = 0.147
+    ln = jnp.log(jnp.maximum(1.0 - x * x, 1e-12))
+    t1 = 2.0 / (jnp.pi * a) + ln / 2.0
+    return jnp.sign(x) * jnp.sqrt(jnp.sqrt(t1 * t1 - ln / a) - t1)
+
+
+@dataclass
+class ChangeDetector:
+    alpha: float = 0.01        # per-feature significance
+    quorum: float = 0.25       # fraction of features that must change
+    feature_mask: np.ndarray | None = None   # optionally ignore features
+
+    def pair_significant(self, m1, v1, n1, m2, v2, n2):
+        """True if windows differ (vector over features -> scalar bool)."""
+        t, dof = welch_t(m1, v1, n1, m2, v2, n2)
+        sig = jnp.abs(t) > _t_crit(dof, self.alpha)
+        if self.feature_mask is not None:
+            sig = sig & jnp.asarray(self.feature_mask)
+            denom = max(int(np.sum(self.feature_mask)), 1)
+        else:
+            denom = sig.shape[-1]
+        return jnp.mean(sig.astype(jnp.float32), axis=-1) * sig.shape[-1] / denom \
+            >= self.quorum
+
+    def online(self, prev, cur):
+        """prev/cur: (mean, var, n) tuples for two windows -> bool."""
+        (m1, v1, n1), (m2, v2, n2) = prev, cur
+        return bool(self.pair_significant(m1, v1, n1, m2, v2, n2))
+
+    def batch(self, ws: WindowSeries) -> np.ndarray:
+        """Transition flags for a window series. Window t is flagged when it
+        differs from window t-1 (paper: non-steady-state w.r.t. neighbours)."""
+        m = jnp.asarray(ws.mean)
+        v = jnp.asarray(ws.var)
+        n = ws.count
+        flags = jax.vmap(lambda a, b, c, d: self.pair_significant(a, b, n, c, d, n))(
+            m[:-1], v[:-1], m[1:], v[1:])
+        return np.concatenate([[False], np.asarray(flags)])
+
+    def match_characterization(self, c1: dict, c2: dict) -> bool:
+        """Off-line WorkloadDB matcher: same workload if NOT significantly
+        different (Algorithm 2)."""
+        return not bool(self.pair_significant(
+            jnp.asarray(c1["mean"]), jnp.asarray(c1["std"]) ** 2, c1["n"],
+            jnp.asarray(c2["mean"]), jnp.asarray(c2["std"]) ** 2, c2["n"]))

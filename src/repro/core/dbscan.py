@@ -1,0 +1,109 @@
+"""DBSCAN workload discovery in JAX (Algorithm 2, discovery step).
+
+Matrix formulation suited to TPU: the ε-neighbourhood graph comes from a tiled
+pairwise-distance kernel (kernels/pairdist.py — the discovery hot-spot is
+O(N²F)); cluster ids then spread over core-core edges by min-label propagation
+to a fixed point (lax.while_loop), border points adopt the smallest core
+neighbour label, and everything else is noise (-1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pairwise_sq_dists(x, impl: str = "auto"):
+    if impl in ("auto", "pallas"):
+        try:
+            from repro.kernels import pairdist
+            return pairdist.pairdist(x, interpret=True)
+        except Exception:
+            if impl == "pallas":
+                raise
+    x = x.astype(jnp.float32)
+    n2 = jnp.sum(x * x, axis=1)
+    d2 = n2[:, None] + n2[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d2, 0.0)
+
+
+@jax.jit
+def _dbscan_core(d2, eps_sq, min_pts):
+    n = d2.shape[0]
+    adj = d2 <= eps_sq                                    # ε-neighbourhood
+    n_nbr = jnp.sum(adj, axis=1)                          # includes self
+    core = n_nbr >= min_pts
+
+    cc = adj & core[:, None] & core[None, :]              # core-core edges
+    cc = cc | jnp.eye(n, dtype=bool)
+    labels0 = jnp.where(core, jnp.arange(n), n)           # n = +inf sentinel
+
+    def body(state):
+        lab, _ = state
+        # min label over core neighbours
+        nbr_min = jnp.min(jnp.where(cc, lab[None, :], n), axis=1)
+        new = jnp.minimum(lab, nbr_min)
+        return new, jnp.any(new != lab)
+
+    def cond(state):
+        return state[1]
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
+
+    # border points: adopt min core-neighbour label
+    border_adj = adj & core[None, :]
+    border_lab = jnp.min(jnp.where(border_adj, labels[None, :], n), axis=1)
+    labels = jnp.where(core, labels, jnp.where(border_lab < n, border_lab, -1))
+    return labels
+
+
+def dbscan(x, eps: float, min_pts: int = 5, impl: str = "auto") -> np.ndarray:
+    """x: (N, F) -> labels (N,) int, noise = -1, clusters renumbered 0..k-1."""
+    d2 = pairwise_sq_dists(jnp.asarray(x), impl)
+    raw = np.asarray(_dbscan_core(d2, jnp.float32(eps * eps),
+                                  jnp.int32(min_pts)))
+    out = np.full(raw.shape, -1, np.int64)
+    uniq = [u for u in np.unique(raw) if u >= 0]
+    for i, u in enumerate(uniq):
+        out[raw == u] = i
+    return out
+
+
+def kmeans(x, k: int, iters: int = 50, seed: int = 0) -> np.ndarray:
+    """Baseline clusterer for the Fig-10 comparison."""
+    x = jnp.asarray(x, jnp.float32)
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    cent = x[idx]
+
+    def step(cent, _):
+        d2 = jnp.sum((x[:, None] - cent[None]) ** 2, -1)
+        a = jnp.argmin(d2, 1)
+        oh = jax.nn.one_hot(a, k, dtype=jnp.float32)
+        tot = oh.T @ x
+        cnt = oh.sum(0)[:, None]
+        new = jnp.where(cnt > 0, tot / jnp.maximum(cnt, 1), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    d2 = jnp.sum((x[:, None] - cent[None]) ** 2, -1)
+    return np.asarray(jnp.argmin(d2, 1))
+
+
+def agglomerative_single_link(x, dist_thresh: float) -> np.ndarray:
+    """Single-linkage connected components at a distance threshold — the
+    third clusterer in the Fig-10 comparison (threshold-graph variant)."""
+    d2 = pairwise_sq_dists(jnp.asarray(x), impl="ref")
+    adj = np.asarray(d2) <= dist_thresh ** 2
+    n = adj.shape[0]
+    labels = np.arange(n)
+    changed = True
+    while changed:
+        nbr_min = np.where(adj, labels[None, :], n).min(1)
+        new = np.minimum(labels, nbr_min)
+        changed = bool((new != labels).any())
+        labels = new
+    out = np.full(n, -1, np.int64)
+    for i, u in enumerate(np.unique(labels)):
+        out[labels == u] = i
+    return out

@@ -1,0 +1,115 @@
+"""Explorer: the on-line configuration-search engine (Genkin et al. [16]).
+
+The search space is the discrete runtime-tunable grid (configs/base.Tunables —
+the TPU analogue of YARN container memory/vcores and Spark executor knobs).
+
+* ``global_search`` — the paper's low-overhead coordinate hill-climb: sweep
+  each knob in impact order keeping the best value, repeat until a fixed
+  point (few tens of evaluations on a grid of thousands).
+* ``local_search``  — re-optimization after drift: neighbours-only moves from
+  the last good configuration.
+* ``exhaustive``    — full grid; the benchmark's "best possible tuning"
+  reference for the paper's 92.5%-efficiency claim.
+
+The objective is any callable(Tunables) -> float cost (measured step seconds
+on a live system; the dominant roofline term in the dry-run hillclimb).
+Evaluations are memoised — repeated workloads cost nothing, which is exactly
+the KERMIT plug-in's reuse story.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from dataclasses import dataclass, field
+
+from repro.configs.base import Tunables, DEFAULT_TUNABLES
+
+# knob -> candidate values, in rough order of expected performance impact
+DEFAULT_SPACE = {
+    "remat": ["dots", "none", "full"],
+    "microbatches": [1, 2, 4, 8],
+    "seq_parallel": [False, True],
+    "attn_q_chunk": [512, 1024, 2048],
+    "capacity_factor": [1.0, 1.25, 1.5, 2.0],
+    "ssm_chunk": [128, 256, 512],
+    "grad_compression": [False, True],
+    "prefetch": [1, 2, 4],
+}
+
+
+@dataclass
+class SearchResult:
+    best: Tunables
+    cost: float
+    evaluations: int
+    trace: list = field(default_factory=list)
+
+
+class Explorer:
+    def __init__(self, space: dict | None = None, max_passes: int = 3):
+        self.space = dict(space or DEFAULT_SPACE)
+        self.max_passes = max_passes
+        self._memo: dict = {}
+
+    def _key(self, tun: Tunables):
+        return tuple(sorted(tun.as_dict().items()))
+
+    def _eval(self, objective, tun: Tunables, counter: list,
+              trace: list) -> float:
+        k = self._key(tun)
+        if k not in self._memo:
+            self._memo[k] = float(objective(tun))
+            counter[0] += 1
+            trace.append((tun.as_dict(), self._memo[k]))
+        return self._memo[k]
+
+    def global_search(self, objective, start: Tunables = DEFAULT_TUNABLES
+                      ) -> SearchResult:
+        best = start
+        counter, trace = [0], []
+        best_cost = self._eval(objective, best, counter, trace)
+        for _ in range(self.max_passes):
+            improved = False
+            for knob, values in self.space.items():
+                for v in values:
+                    if getattr(best, knob) == v:
+                        continue
+                    cand = best.replace(**{knob: v})
+                    c = self._eval(objective, cand, counter, trace)
+                    if c < best_cost - 1e-12:
+                        best, best_cost, improved = cand, c, True
+            if not improved:
+                break
+        return SearchResult(best, best_cost, counter[0], trace)
+
+    def local_search(self, objective, start: Tunables) -> SearchResult:
+        """Neighbour moves only: one grid step per knob from ``start``."""
+        best = start
+        counter, trace = [0], []
+        best_cost = self._eval(objective, best, counter, trace)
+        improved = True
+        while improved:
+            improved = False
+            for knob, values in self.space.items():
+                cur = getattr(best, knob)
+                if cur not in values:
+                    continue
+                i = values.index(cur)
+                for j in (i - 1, i + 1):
+                    if 0 <= j < len(values):
+                        cand = best.replace(**{knob: values[j]})
+                        c = self._eval(objective, cand, counter, trace)
+                        if c < best_cost - 1e-12:
+                            best, best_cost, improved = cand, c, True
+        return SearchResult(best, best_cost, counter[0], trace)
+
+    def exhaustive(self, objective) -> SearchResult:
+        counter, trace = [0], []
+        best, best_cost = None, math.inf
+        knobs = list(self.space)
+        for combo in itertools.product(*(self.space[k] for k in knobs)):
+            cand = DEFAULT_TUNABLES.replace(**dict(zip(knobs, combo)))
+            c = self._eval(objective, cand, counter, trace)
+            if c < best_cost:
+                best, best_cost = cand, c
+        return SearchResult(best, best_cost, counter[0], trace)

@@ -1,0 +1,153 @@
+"""Random forest (WorkloadClassifier / TransitionClassifier) in pure JAX.
+
+Level-wise greedy training of complete binary trees with histogram splits on
+global quantile candidates, Gini impurity, bootstrap rows and per-tree feature
+subsets; vmapped over trees. All shapes are static so fit/predict jit cleanly.
+
+The paper selected random forests over SVM/NB/k-NN for workload classification
+(its Fig. 6); bench_classifiers.py reproduces that comparison.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ForestConfig:
+    n_trees: int = 32
+    depth: int = 6                 # internal levels; leaves = 2^depth
+    n_quantiles: int = 16
+    n_classes: int = 8
+    feature_frac: float = 0.7      # per-tree feature subset
+    min_leaf: int = 2
+
+
+def _quantile_grid(x, q: int):
+    qs = jnp.linspace(0.02, 0.98, q)
+    return jnp.quantile(x, qs, axis=0).T          # (F, Q)
+
+
+def _fit_tree(key, x, y, w, grid, fc: ForestConfig):
+    """x: (N,F), y: (N,) int, w: (N,) bootstrap weights, grid: (F,Q).
+    Returns feat (M,), thr (M,), leaf_dist (2^D, C) with M = 2^D - 1."""
+    N, F = x.shape
+    D, Q, C = fc.depth, fc.n_quantiles, fc.n_classes
+    M = 2 ** D - 1
+
+    fkey, _ = jax.random.split(key)
+    fmask = jax.random.uniform(fkey, (F,)) < fc.feature_frac
+    fmask = fmask.at[jax.random.randint(fkey, (), 0, F)].set(True)  # >=1 feat
+
+    # bin index per (sample, feature): sum of thresholds passed
+    bins = jnp.sum(x[:, :, None] > grid[None, :, :], axis=-1)       # (N,F) in [0,Q]
+    onehot_y = jax.nn.one_hot(y, C) * w[:, None]                    # (N,C)
+
+    local = jnp.zeros((N,), jnp.int32)     # node index within current level
+    feat = jnp.zeros((M,), jnp.int32)
+    thr = jnp.zeros((M,), jnp.float32)
+
+    for d in range(D):
+        n_nodes = 2 ** d
+        base = n_nodes - 1
+        # histogram: (node, F, Q+1, C) class-weight counts
+        seg = local[:, None] * (F * (Q + 1)) + \
+            jnp.arange(F)[None, :] * (Q + 1) + bins                 # (N,F)
+        hist = jnp.zeros((n_nodes * F * (Q + 1), C))
+        hist = hist.at[seg.reshape(-1)].add(
+            jnp.repeat(onehot_y, F, axis=0))
+        hist = hist.reshape(n_nodes, F, Q + 1, C)
+
+        cum = jnp.cumsum(hist, axis=2)[:, :, :Q, :]                 # left counts
+        tot = hist.sum(axis=2, keepdims=True)                       # (n,F,1,C)
+        left = cum
+        right = tot - left
+        nl = left.sum(-1)                                           # (n,F,Q)
+        nr = right.sum(-1)
+        gl = 1.0 - jnp.sum(jnp.square(left / jnp.maximum(nl[..., None], 1e-9)), -1)
+        gr = 1.0 - jnp.sum(jnp.square(right / jnp.maximum(nr[..., None], 1e-9)), -1)
+        ntot = jnp.maximum(nl + nr, 1e-9)
+        imp = (nl * gl + nr * gr) / ntot
+        bad = (nl < fc.min_leaf) | (nr < fc.min_leaf) | ~fmask[None, :, None]
+        imp = jnp.where(bad, jnp.inf, imp)
+
+        flat = imp.reshape(n_nodes, F * Q)
+        best = jnp.argmin(flat, axis=1)                             # (n,)
+        bf = (best // Q).astype(jnp.int32)
+        bq = best % Q
+        bthr = grid[bf, bq]
+        no_split = ~jnp.isfinite(jnp.min(flat, axis=1))
+        bthr = jnp.where(no_split, jnp.inf, bthr)   # send everything left
+
+        feat = jax.lax.dynamic_update_slice(feat, bf, (base,))
+        thr = jax.lax.dynamic_update_slice(thr, bthr.astype(jnp.float32), (base,))
+
+        go_right = x[jnp.arange(N), bf[local]] > bthr[local]
+        local = local * 2 + go_right.astype(jnp.int32)
+
+    # recompute leaf assignment cleanly by routing from the root
+    leaf = _route(x, feat, thr, D)
+    dist = jnp.zeros((2 ** D, C)).at[leaf].add(onehot_y)
+    dist = dist / jnp.maximum(dist.sum(-1, keepdims=True), 1e-9)
+    return feat, thr, dist
+
+
+def _route(x, feat, thr, depth: int):
+    N = x.shape[0]
+    idx = jnp.zeros((N,), jnp.int32)
+    for _ in range(depth):
+        f = feat[idx]
+        t = thr[idx]
+        go_right = x[jnp.arange(N), f] > t
+        idx = idx * 2 + 1 + go_right.astype(jnp.int32)
+    return idx - (2 ** depth - 1)
+
+
+class RandomForest:
+    def __init__(self, fc: ForestConfig):
+        self.fc = fc
+        self.params = None
+        self.grid = None
+
+    def fit(self, x, y, seed: int = 0):
+        fc = self.fc
+        x = jnp.asarray(x, jnp.float32)
+        y = jnp.asarray(y, jnp.int32)
+        N = x.shape[0]
+        self.grid = _quantile_grid(x, fc.n_quantiles)
+        keys = jax.random.split(jax.random.PRNGKey(seed), fc.n_trees)
+
+        def one(key):
+            bkey, tkey = jax.random.split(key)
+            rows = jax.random.randint(bkey, (N,), 0, N)
+            w = jnp.zeros((N,)).at[rows].add(1.0)       # bootstrap weights
+            return _fit_tree(tkey, x, y, w, self.grid, fc)
+
+        self.params = jax.vmap(one)(keys)               # stacked over trees
+        return self
+
+    @partial(jax.jit, static_argnums=0)
+    def _predict_dist(self, x):
+        feat, thr, dist = self.params
+        D = self.fc.depth
+
+        def per_tree(f, t, d):
+            leaf = _route(x, f, t, D)
+            return d[leaf]                               # (N, C)
+
+        probs = jax.vmap(per_tree)(feat, thr, dist)      # (T, N, C)
+        return probs.mean(0)
+
+    def predict_proba(self, x):
+        return np.asarray(self._predict_dist(jnp.asarray(x, jnp.float32)))
+
+    def predict(self, x):
+        return np.asarray(jnp.argmax(
+            self._predict_dist(jnp.asarray(x, jnp.float32)), axis=-1))
+
+    def score(self, x, y):
+        return float(np.mean(self.predict(x) == np.asarray(y)))

@@ -1,0 +1,157 @@
+"""WorkloadDB — the Knowledge component of the MAPE-K loop (paper Fig. 11).
+
+Entity model (per workload label): characterization statistics, a single
+stored configuration, ``has_optimal`` and ``is_drifting`` flags, synthetic
+(ZSL-anticipated) provenance. Labels are auto-generated unique ints (the
+paper's integer-counter scheme, chosen to ease libsvm-style training-file
+generation) and are never deleted — KERMIT's long-term memory.
+
+The knowledge base persists under the HDFS-like zone layout:
+  <root>/lz/   raw agent telemetry (JSONL, appended by the monitor/agents)
+  <root>/tz/   observation-window series (npz)
+  <root>/az/   workloads.json (this DB) + trained model params
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field, asdict
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.core.change_detector import ChangeDetector
+from repro.core.characterize import l2_drift, merge_characterizations
+
+UNKNOWN = -1
+
+
+def _to_jsonable(c: dict) -> dict:
+    return {k: (v.tolist() if isinstance(v, np.ndarray) else v)
+            for k, v in c.items()}
+
+
+def _from_jsonable(c: dict) -> dict:
+    return {k: (np.asarray(v, np.float32) if isinstance(v, list) else v)
+            for k, v in c.items()}
+
+
+@dataclass
+class WorkloadRecord:
+    label: int
+    characterization: dict
+    config: Optional[dict] = None
+    has_optimal: bool = False
+    is_drifting: bool = False
+    is_synthetic: bool = False
+    pair: Optional[tuple] = None          # hybrid provenance
+    observations: int = 0
+    updated_at: float = field(default_factory=time.time)
+
+
+class WorkloadDB:
+    def __init__(self, root: str | Path | None = None,
+                 drift_eps: float = 1.0,
+                 matcher: ChangeDetector | None = None):
+        self.root = Path(root) if root else None
+        self.records: dict[int, WorkloadRecord] = {}
+        self._next_label = 0
+        self.drift_eps = drift_eps
+        self.matcher = matcher or ChangeDetector(alpha=0.001, quorum=0.5)
+        if self.root is not None:
+            for z in ("lz", "tz", "az"):
+                (self.root / z).mkdir(parents=True, exist_ok=True)
+            self._load()
+
+    # -- label generation (paper: unique auto-increment ints) --------------
+
+    def new_label(self) -> int:
+        l = self._next_label
+        self._next_label += 1
+        return l
+
+    # -- core operations ----------------------------------------------------
+
+    def find_match(self, char: dict) -> Optional[int]:
+        """Statistical match (ChangeDetector off-line) with an L2 fallback
+        ranking; returns the matching label or None."""
+        best, best_d = None, np.inf
+        for label, rec in self.records.items():
+            if rec.is_synthetic:
+                continue
+            d = l2_drift(rec.characterization, char)
+            if self.matcher.match_characterization(rec.characterization, char):
+                if d < best_d:
+                    best, best_d = label, d
+        return best
+
+    def insert(self, char: dict, *, is_synthetic=False, pair=None,
+               label: int | None = None) -> int:
+        label = self.new_label() if label is None else label
+        self._next_label = max(self._next_label, label + 1)
+        self.records[label] = WorkloadRecord(
+            label=label, characterization=char, is_synthetic=is_synthetic,
+            pair=pair, observations=char.get("n", 0))
+        return label
+
+    def observe(self, label: int, char: dict) -> bool:
+        """Update a known workload with a fresh characterization; returns
+        True when drift was detected (Algorithm 2 drift branch)."""
+        rec = self.records[label]
+        drift = l2_drift(rec.characterization, char) > self.drift_eps
+        if drift:
+            rec.is_drifting = True
+            rec.has_optimal = False
+        rec.characterization = merge_characterizations(
+            rec.characterization, char)
+        rec.observations += char.get("n", 0)
+        rec.updated_at = time.time()
+        return drift
+
+    def set_config(self, label: int, config: dict, optimal: bool):
+        rec = self.records[label]
+        rec.config = dict(config)
+        rec.has_optimal = optimal
+        if optimal:
+            rec.is_drifting = False
+        rec.updated_at = time.time()
+
+    def get(self, label: int) -> Optional[WorkloadRecord]:
+        return self.records.get(label)
+
+    def pure_characterizations(self) -> dict:
+        return {l: r.characterization for l, r in self.records.items()
+                if not r.is_synthetic}
+
+    def labels(self):
+        return sorted(self.records)
+
+    # -- persistence (az zone) ----------------------------------------------
+
+    def save(self):
+        if self.root is None:
+            return
+        out = {
+            "next_label": self._next_label,
+            "records": [
+                dict(asdict(r),
+                     characterization=_to_jsonable(r.characterization))
+                for r in self.records.values()],
+        }
+        path = self.root / "az" / "workloads.json"
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(out))
+        tmp.replace(path)
+
+    def _load(self):
+        path = self.root / "az" / "workloads.json"
+        if not path.exists():
+            return
+        raw = json.loads(path.read_text())
+        self._next_label = raw["next_label"]
+        for r in raw["records"]:
+            r["characterization"] = _from_jsonable(r["characterization"])
+            r["pair"] = tuple(r["pair"]) if r["pair"] else None
+            rec = WorkloadRecord(**r)
+            self.records[rec.label] = rec

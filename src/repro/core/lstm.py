@@ -1,0 +1,130 @@
+"""WorkloadPredictor: LSTM over the label stream predicting the workload
+label at horizons t+1, t+5, t+10 (the paper's workload-context fields).
+
+Pure JAX: lax.scan cell, three softmax heads, trained with the repo's AdamW.
+Input is the one-hot label window (optionally with feature context).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import OptConfig, adamw_init, adamw_update
+
+HORIZONS = (1, 5, 10)
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    n_classes: int = 8
+    hidden: int = 64
+    window: int = 16            # history length fed to the LSTM
+    epochs: int = 60
+    batch: int = 64
+    lr: float = 5e-3
+
+
+def _init(key, pc: PredictorConfig):
+    C, H = pc.n_classes, pc.hidden
+    k = jax.random.split(key, 6)
+    s = 0.1
+    return {
+        "wx": jax.random.normal(k[0], (C, 4 * H)) * s,
+        "wh": jax.random.normal(k[1], (H, 4 * H)) * s,
+        "b": jnp.zeros((4 * H,)),
+        "heads": {f"h{h}": jax.random.normal(k[2 + i], (H, C)) * s
+                  for i, h in enumerate(HORIZONS)},
+        "head_b": {f"h{h}": jnp.zeros((C,)) for h in HORIZONS},
+    }
+
+
+def _forward(params, xs):
+    """xs: (B, W, C) one-hot history -> dict horizon -> (B, C) logits."""
+    B = xs.shape[0]
+    H = params["wh"].shape[0]
+
+    def cell(carry, x):
+        h, c = carry
+        z = x @ params["wx"] + h @ params["wh"] + params["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    init = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+    (h, _), _ = jax.lax.scan(cell, init, xs.swapaxes(0, 1))
+    return {hz: h @ params["heads"][f"h{hz}"] + params["head_b"][f"h{hz}"]
+            for hz in HORIZONS}
+
+
+def _make_dataset(labels: np.ndarray, pc: PredictorConfig):
+    W = pc.window
+    hmax = max(HORIZONS)
+    n = len(labels) - W - hmax
+    if n <= 0:
+        raise ValueError("label sequence too short for predictor training")
+    xs = np.stack([labels[i:i + W] for i in range(n)])
+    ys = {h: np.asarray([labels[i + W + h - 1] for i in range(n)])
+          for h in HORIZONS}
+    return xs, ys
+
+
+class WorkloadPredictor:
+    def __init__(self, pc: PredictorConfig):
+        self.pc = pc
+        self.params = None
+
+    def fit(self, labels: np.ndarray, seed: int = 0):
+        pc = self.pc
+        xs, ys = _make_dataset(np.asarray(labels, np.int32), pc)
+        xs_oh = jax.nn.one_hot(jnp.asarray(xs), pc.n_classes)
+        ys = {h: jnp.asarray(v) for h, v in ys.items()}
+        params = _init(jax.random.PRNGKey(seed), pc)
+        oc = OptConfig(lr=pc.lr, warmup=10, total_steps=pc.epochs * 8,
+                       weight_decay=0.0, grad_clip=1.0)
+        opt = adamw_init(params, oc)
+
+        def loss_fn(p, xb, yb):
+            logits = _forward(p, xb)
+            total = 0.0
+            for h in HORIZONS:
+                lp = jax.nn.log_softmax(logits[h])
+                total += -jnp.mean(
+                    jnp.take_along_axis(lp, yb[h][:, None], axis=1))
+            return total / len(HORIZONS)
+
+        @jax.jit
+        def step(p, opt, xb, yb):
+            l, g = jax.value_and_grad(loss_fn)(p, xb, yb)
+            p2, opt2, _ = adamw_update(g, opt, p, oc)
+            return p2, opt2, l
+
+        n = xs_oh.shape[0]
+        key = jax.random.PRNGKey(seed + 1)
+        for ep in range(pc.epochs):
+            key, sk = jax.random.split(key)
+            order = jax.random.permutation(sk, n)
+            for i in range(0, n - pc.batch + 1, pc.batch):
+                sl = order[i:i + pc.batch]
+                yb = {h: ys[h][sl] for h in HORIZONS}
+                params, opt, l = step(params, opt, xs_oh[sl], yb)
+        self.params = params
+        return self
+
+    def predict(self, history: np.ndarray) -> dict:
+        """history: (W,) or (B, W) label ids -> {horizon: (B,) predicted}."""
+        h = np.asarray(history, np.int32)
+        if h.ndim == 1:
+            h = h[None]
+        xs = jax.nn.one_hot(jnp.asarray(h[:, -self.pc.window:]),
+                            self.pc.n_classes)
+        logits = _forward(self.params, xs)
+        return {hz: np.asarray(jnp.argmax(l, -1)) for hz, l in logits.items()}
+
+    def score(self, labels: np.ndarray) -> dict:
+        xs, ys = _make_dataset(np.asarray(labels, np.int32), self.pc)
+        preds = self.predict(xs)
+        return {h: float(np.mean(preds[h] == ys[h])) for h in HORIZONS}

@@ -1,0 +1,122 @@
+"""KWmon — the KERMIT Workload Monitor (on-line subsystem core).
+
+Streams raw agent telemetry (lz zone JSONL, or in-process emits), aggregates
+``window_size`` samples into observation windows O_t, runs the on-line
+classification pipeline (ChangeDetector -> WorkloadClassifier ->
+WorkloadPredictor) and emits workload-context objects C_t carrying the current
+label and the predicted labels at t+1 / t+5 / t+10 (paper §6.4).
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field, asdict
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.core.change_detector import ChangeDetector
+from repro.core.knowledge import UNKNOWN
+from repro.core.windows import NUM_FEATURES, make_windows
+
+
+@dataclass
+class WorkloadContext:
+    window_id: int
+    timestamp: float
+    current_label: int                  # UNKNOWN until discovery catches up
+    predicted: dict                     # {1: label, 5: label, 10: label}
+    in_transition: bool
+    features: list = field(default_factory=list)
+
+    def to_json(self) -> str:
+        return json.dumps(asdict(self))
+
+
+class KermitMonitor:
+    def __init__(self, *, window_size: int = 32,
+                 detector: Optional[ChangeDetector] = None,
+                 classifier=None, predictor=None,
+                 root: str | Path | None = None):
+        self.window_size = window_size
+        self.detector = detector or ChangeDetector()
+        self.classifier = classifier      # RandomForest | None (untrained yet)
+        self.predictor = predictor        # WorkloadPredictor | None
+        self.root = Path(root) if root else None
+        self._buf: list = []
+        self._prev_window = None
+        self._window_id = 0
+        self.window_log: list = []        # (mean, var) per emitted window
+        self.label_log: list = []
+        self.contexts: list = []
+        if self.root is not None:
+            (self.root / "tz").mkdir(parents=True, exist_ok=True)
+            self._ctx_file = (self.root / "tz" / "context.jsonl").open("a")
+        else:
+            self._ctx_file = None
+
+    # -- streaming ingestion -------------------------------------------------
+
+    def ingest(self, sample) -> Optional[WorkloadContext]:
+        """Feed one raw telemetry sample (F,); returns a context when a full
+        observation window was completed."""
+        self._buf.append(np.asarray(sample, np.float32))
+        if len(self._buf) < self.window_size:
+            return None
+        arr = np.stack(self._buf)
+        self._buf.clear()
+        return self._emit(arr.mean(0), arr.var(0, ddof=1))
+
+    def ingest_array(self, samples) -> list:
+        out = []
+        for s in np.asarray(samples, np.float32):
+            c = self.ingest(s)
+            if c is not None:
+                out.append(c)
+        return out
+
+    def _emit(self, mean, var) -> WorkloadContext:
+        n = self.window_size
+        in_trans = False
+        if self._prev_window is not None:
+            in_trans = self.detector.online(self._prev_window, (mean, var, n))
+        self._prev_window = (mean, var, n)
+
+        label = UNKNOWN
+        if self.classifier is not None and not in_trans:
+            label = int(self.classifier.predict(mean[None])[0])
+        self.window_log.append((mean, var))
+        self.label_log.append(label)
+
+        predicted = {1: UNKNOWN, 5: UNKNOWN, 10: UNKNOWN}
+        if self.predictor is not None and len(self.label_log) >= \
+                self.predictor.pc.window and label != UNKNOWN:
+            hist = np.asarray(self.label_log[-self.predictor.pc.window:])
+            if (hist >= 0).all():
+                p = self.predictor.predict(hist)
+                predicted = {h: int(v[0]) for h, v in p.items()}
+
+        ctx = WorkloadContext(
+            window_id=self._window_id, timestamp=time.time(),
+            current_label=label, predicted=predicted, in_transition=in_trans,
+            features=[float(x) for x in mean])
+        self._window_id += 1
+        self.contexts.append(ctx)
+        if self._ctx_file is not None:
+            self._ctx_file.write(ctx.to_json() + "\n")
+            self._ctx_file.flush()
+        return ctx
+
+    # -- batch access for the off-line subsystem ------------------------------
+
+    def window_series(self):
+        if not self.window_log:
+            return None
+        from repro.core.windows import WindowSeries
+        mean = np.stack([m for m, _ in self.window_log])
+        var = np.stack([v for _, v in self.window_log])
+        return WindowSeries(mean, var, self.window_size)
+
+    def latest_context(self) -> Optional[WorkloadContext]:
+        return self.contexts[-1] if self.contexts else None

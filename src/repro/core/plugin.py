@@ -1,0 +1,89 @@
+"""KPlg — the KERMIT plug-in (paper Algorithm 1).
+
+Called at every resource request (here: before each training/serving step
+bundle). Reads the latest workload context from the monitor stream, then:
+
+  UNKNOWN label                -> default configuration J^D
+  known + has optimal config   -> reuse stored configuration (no search!)
+  known + drifting             -> Explorer.local_search from last good config
+  known + no config            -> Explorer.global_search
+
+and updates WorkloadDB with the result. Context staleness is checked against
+``max_staleness_s``; stale contexts log an error and fall back to default.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass
+
+from repro.configs.base import DEFAULT_TUNABLES, Tunables
+from repro.core.explorer import Explorer
+from repro.core.knowledge import UNKNOWN, WorkloadDB
+from repro.core.monitor import KermitMonitor, WorkloadContext
+
+log = logging.getLogger("kermit.plugin")
+
+
+@dataclass
+class PluginStats:
+    requests: int = 0
+    default_used: int = 0
+    reused: int = 0
+    global_searches: int = 0
+    local_searches: int = 0
+    stale_contexts: int = 0
+    evaluations: int = 0
+
+
+class KermitPlugin:
+    def __init__(self, db: WorkloadDB, monitor: KermitMonitor,
+                 explorer: Explorer | None = None,
+                 default: Tunables = DEFAULT_TUNABLES,
+                 max_staleness_s: float = 300.0):
+        self.db = db
+        self.monitor = monitor
+        self.explorer = explorer or Explorer()
+        self.default = default
+        self.max_staleness_s = max_staleness_s
+        self.stats = PluginStats()
+
+    def on_resource_request(self, objective) -> Tunables:
+        """Algorithm 1. ``objective``: callable(Tunables) -> measured cost,
+        evaluated only when a search actually runs."""
+        self.stats.requests += 1
+        ctx = self.monitor.latest_context()
+
+        if ctx is None or (time.time() - ctx.timestamp) > self.max_staleness_s:
+            if ctx is not None:
+                log.error("workload context stale (%.1fs) — using default; "
+                          "monitor out of sync", time.time() - ctx.timestamp)
+            self.stats.stale_contexts += ctx is not None
+            self.stats.default_used += 1
+            return self.default
+
+        label = ctx.current_label
+        if label == UNKNOWN:
+            self.stats.default_used += 1
+            return self.default
+
+        rec = self.db.get(label)
+        if rec is None:                       # classifier ahead of DB
+            self.stats.default_used += 1
+            return self.default
+
+        if rec.has_optimal and rec.config is not None:
+            self.stats.reused += 1
+            return Tunables(**rec.config)
+
+        if rec.is_drifting and rec.config is not None:
+            res = self.explorer.local_search(objective,
+                                             Tunables(**rec.config))
+            self.stats.local_searches += 1
+        else:
+            res = self.explorer.global_search(objective, self.default)
+            self.stats.global_searches += 1
+        self.stats.evaluations += res.evaluations
+        self.db.set_config(label, res.best.as_dict(), optimal=True)
+        self.db.save()
+        return res.best

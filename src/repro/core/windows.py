@@ -1,0 +1,72 @@
+"""Observation windows and the telemetry feature vector.
+
+The paper's feature vector is built from container performance metrics
+(cpu/io/net); our TPU adaptation uses step telemetry of the same
+dimensionality class. A *workload* Ω is a run of observation windows with no
+statistically-meaningful inter-window change; a *workload transition* is a run
+of windows with significant change (DESIGN.md §1).
+
+An observation window aggregates ``window_size`` raw samples and carries
+(mean, var, n) per feature so Welch's test can run on any pair of windows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FEATURES = [
+    "step_time",        # s
+    "tokens_per_s",     # throughput
+    "mfu",              # model-flops utilization proxy [0,1]
+    "hbm_util",         # memory-bandwidth utilization proxy [0,1]
+    "coll_frac",        # fraction of step in collectives [0,1]
+    "host_wait",        # input-pipeline stall fraction [0,1]
+    "peak_mem_frac",    # HBM high-water mark fraction [0,1]
+    "grad_norm",        # training only
+    "loss_delta",       # training only
+    "expert_imbalance", # MoE only; 1.0 = perfectly balanced
+    "cache_occ",        # serving: KV-cache occupancy [0,1]
+    "seq_len_log",      # log2 seq-len / 20
+    "batch_log",        # log2 global batch / 10
+    "decode_frac",      # fraction of steps that are decode [0,1]
+    "recompute_frac",   # remat recompute fraction [0,1]
+    "io_rate",          # host ingest GB/s (normalized)
+]
+NUM_FEATURES = len(FEATURES)
+
+
+@dataclass
+class WindowSeries:
+    """A batch of observation windows: mean/var/n per window."""
+    mean: np.ndarray          # (n_windows, F)
+    var: np.ndarray           # (n_windows, F)
+    count: int                # samples per window
+
+    def __len__(self):
+        return self.mean.shape[0]
+
+    def slice(self, sl):
+        return WindowSeries(self.mean[sl], self.var[sl], self.count)
+
+    def concat(self, other: "WindowSeries") -> "WindowSeries":
+        assert self.count == other.count
+        return WindowSeries(np.concatenate([self.mean, other.mean]),
+                            np.concatenate([self.var, other.var]), self.count)
+
+
+def make_windows(samples, window_size: int) -> WindowSeries:
+    """samples: (N, F) raw telemetry -> floor(N/W) observation windows."""
+    samples = np.asarray(samples, np.float32)
+    n = (samples.shape[0] // window_size) * window_size
+    s = samples[:n].reshape(-1, window_size, samples.shape[1])
+    return WindowSeries(s.mean(1), s.var(1, ddof=1), window_size)
+
+
+def rate_of_change(mean: np.ndarray) -> np.ndarray:
+    """{A_t} -> {A'_t}: per-window feature deltas (TransitionClassifier
+    features, training-pipeline step 5)."""
+    d = np.diff(mean, axis=0, prepend=mean[:1])
+    return d.astype(np.float32)

@@ -1,0 +1,10 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Backend dispatch: compiled Mosaic on TPU, interpret=True elsewhere (the
+kernel body runs in Python via XLA — correctness identical, speed not).
+"""
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd
+from repro.kernels.pairdist import pairdist, neighbor_count
+
+__all__ = ["flash_attention", "ssd", "pairdist", "neighbor_count"]

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: tiled pairwise squared distances (+ ε-neighbour counts).
+
+This is KERMIT's workload-discovery hot-spot: DBSCAN over the window history
+is O(N²F) and reruns at every off-line analysis interval. The kernel tiles the
+(N, N) output into MXU-aligned (bm, bn) blocks; each block needs only two
+(b, F) strips resident in VMEM.
+
+ref.py oracle: ``ref_pairdist`` below (pure jnp).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def ref_pairdist(x):
+    """(N, F) -> (N, N) squared euclidean distances."""
+    x = x.astype(jnp.float32)
+    n2 = jnp.sum(x * x, axis=1)
+    d2 = n2[:, None] + n2[None, :] - 2.0 * (x @ x.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def ref_neighbor_count(x, eps):
+    return jnp.sum(ref_pairdist(x) <= eps * eps, axis=1)
+
+
+def _kernel(x_ref, y_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (bm, F)
+    y = y_ref[...].astype(jnp.float32)          # (bn, F)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1, keepdims=True)
+    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.maximum(xx + yy.T - 2.0 * xy, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def pairdist(x, *, block: int = 128, interpret: bool = False):
+    """(N, F) -> (N, N) squared distances via pl.pallas_call."""
+    n, f = x.shape
+    bm = min(block, n)
+    npad = (-n) % bm
+    if npad:
+        x = jnp.pad(x, ((0, npad), (0, 0)))
+    np_ = x.shape[0]
+    grid = (np_ // bm, np_ // bm)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
+        interpret=interpret,
+    )(x, x)
+    return out[:n, :n]
+
+
+def neighbor_count(x, eps, *, block: int = 128, interpret: bool = False):
+    d2 = pairdist(x, block=block, interpret=interpret)
+    return jnp.sum(d2 <= eps * eps, axis=1)

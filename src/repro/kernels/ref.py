@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+flash_attention -> repro.models.layers.attention_xla (chunked masked GQA)
+ssd_scan        -> repro.models.mamba2.ssd_chunked
+pairdist        -> pairdist.ref_pairdist
+"""
+import jax.numpy as jnp
+
+from repro.models.layers import attention_xla
+from repro.models.mamba2 import ssd_chunked
+from repro.kernels.pairdist import ref_pairdist, ref_neighbor_count
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0):
+    import jax.numpy as jnp
+    return attention_xla(q, k, v, q_pos=jnp.arange(q.shape[1]),
+                         kv_pos=jnp.arange(k.shape[1]), causal=causal,
+                         window=window, softcap=softcap,
+                         q_chunk=max(q.shape[1], 1))
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk=256):
+    y, s = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    return y.astype(jnp.float32), s
+
+
+__all__ = ["attention_ref", "ssd_ref", "ref_pairdist", "ref_neighbor_count"]

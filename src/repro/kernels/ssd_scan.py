@@ -1,0 +1,145 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+Grid = (batch, chunks); the chunk axis is innermost/sequential, so the carried
+SSM state (H, N, P) lives in f32 VMEM scratch across chunk iterations — the
+inter-chunk recurrence never round-trips to HBM (on GPU this is the kernel the
+paper's SSD algorithm fuses; on TPU the win is identical: the state stays in
+VMEM and each chunk's intra-chunk quadratic work feeds the MXU).
+
+Per chunk (length Q): decay cumsum, intra-chunk (C·Bᵀ ⊙ L) x, state read
+C·S_prev, state update S = tot·S_prev + Σ decay·dt·B⊗x.
+
+ref oracle: repro.models.mamba2.ssd_chunked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    pltpu = None
+    _VMEM = None
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sfin_ref, s_scr, *,
+            nc, Q, H, P, G, N):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, H, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, H)
+    A = a_ref[...].astype(jnp.float32)      # (H,)
+    Bm = b_ref[0].astype(jnp.float32)       # (Q, G, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (Q, G, N)
+    r = H // G
+
+    a = dt * A                              # (Q, H) negative increments
+    cum = jnp.cumsum(a, axis=0)             # (Q, H)
+
+    # intra-chunk: scores[h,i,j] = (C_i·B_j) exp(cum_i - cum_j) dt_j, i>=j
+    CB = jnp.einsum("igN,jgN->gij", Cm, Bm)
+    CB = jnp.repeat(CB, r, axis=0)          # (H, Q, Q)
+    diff = cum.T[:, :, None] - cum.T[:, None, :]
+    tril = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    Lm = jnp.exp(jnp.where(tril[None], diff, -1e30))  # mask pre-exp (no inf)
+    scores = CB * Lm * dt.T[:, None, :]
+    y_intra = jnp.einsum("hij,jhp->ihp", scores, x)
+
+    # inter-chunk: read previous state
+    s_prev = s_scr[...]                     # (H, N, P)
+    Ch = jnp.repeat(Cm, r, axis=1).reshape(Q, H, N) if G == 1 else \
+        jnp.repeat(Cm[:, :, None, :], r, axis=2).reshape(Q, H, N)
+    dec_start = jnp.exp(cum)                # (Q, H)
+    y_inter = jnp.einsum("ih,ihn,hnp->ihp", dec_start, Ch, s_prev)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state update
+    Bh = jnp.repeat(Bm, r, axis=1).reshape(Q, H, N) if G == 1 else \
+        jnp.repeat(Bm[:, :, None, :], r, axis=2).reshape(Q, H, N)
+    dec_end = jnp.exp(cum[-1][None, :] - cum)       # (Q, H)
+    S_c = jnp.einsum("jh,jhn,jhp->hnp", dec_end * dt, Bh, x)
+    tot = jnp.exp(cum[-1])                  # (H,)
+    s_scr[...] = s_prev * tot[:, None, None] + S_c
+
+    @pl.when(ci == nc - 1)
+    def _done():
+        sfin_ref[0] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_fwd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool = False):
+    """x: (B,S,H,P), dt: (B,S,H), A: (H,), Bm/Cm: (B,S,G,N).
+    Returns (y (B,S,H,P) f32, final_state (B,H,N,P) f32)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    kernel = functools.partial(_kernel, nc=nc, Q=Q, H=H, P=P, G=G, N=N)
+    y, s_fin = pl.pallas_call(
+        kernel,
+        grid=(Bsz, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, Q, H), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((H,), lambda b, c: (0,)),
+            pl.BlockSpec((1, Q, G, N), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, Q, G, N), lambda b, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, H, N, P), lambda b, c: (b, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[_VMEM((H, N, P), jnp.float32)]
+        if _VMEM is not None else None,
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, s_fin
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def ssd_core(x, dt, A, Bm, Cm, chunk, interpret):
+    return _ssd_fwd(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+
+def _ref(x, dt, A, Bm, Cm, chunk):
+    from repro.models.mamba2 import ssd_chunked
+    y, s = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    return y.astype(jnp.float32), s
+
+
+def _fwd(x, dt, A, Bm, Cm, chunk, interpret):
+    return ssd_core(x, dt, A, Bm, Cm, chunk, interpret), (x, dt, A, Bm, Cm)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, dt, A, Bm, Cm = res
+    _, vjp = jax.vjp(lambda *a: _ref(*a, chunk), x, dt, A, Bm, Cm)
+    return vjp(g)
+
+
+ssd_core.defvjp(_fwd, _bwd)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    Q = min(chunk, x.shape[1])
+    while x.shape[1] % Q:
+        Q //= 2
+    return ssd_core(x, dt, A, Bm, Cm, Q, bool(interpret))

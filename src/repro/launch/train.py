@@ -1,0 +1,76 @@
+"""Training launcher.
+
+CPU-friendly default: reduced config + small shape. On a real TPU mesh the
+same entry point takes --full and the production mesh (the step builder,
+sharding rules, checkpointing and the autonomic loop are identical).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 30
+  PYTHONPATH=src python -m repro.launch.train --arch mamba2-1.3b --autonomic \
+      --steps 200 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.base import DEFAULT_TUNABLES, ShapeSpec, reduced
+from repro.configs.registry import ARCHS, get_config
+from repro.core.autonomic import AutonomicManager
+from repro.optim.adamw import OptConfig
+from repro.runtime.fault import FailureInjector
+from repro.runtime.loop import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS, default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="full config (needs a real accelerator mesh)")
+    ap.add_argument("--autonomic", action="store_true",
+                    help="enable the KERMIT MAPE-K loop")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--kermit-root", default=None)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject node failures at these steps")
+    ap.add_argument("--tun", nargs="*", default=[], help="tunable k=v")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduced(cfg)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    tun = DEFAULT_TUNABLES
+    for kv in args.tun:
+        k, v = kv.split("=", 1)
+        cur = getattr(tun, k)
+        v = (v.lower() in ("1", "true")) if isinstance(cur, bool) else \
+            type(cur)(v)
+        tun = tun.replace(**{k: v})
+
+    autonomic = AutonomicManager(root=args.kermit_root) if args.autonomic \
+        else None
+    injector = FailureInjector(fail_steps=tuple(args.fail_at)) \
+        if args.fail_at else None
+    tr = Trainer(cfg, shape, OptConfig(lr=args.lr, warmup=10), tun,
+                 ckpt_dir=args.ckpt_dir, autonomic=autonomic,
+                 injector=injector)
+    rep = tr.run(args.steps)
+    out = {
+        "arch": args.arch, "steps": rep.steps_done,
+        "loss_first": rep.losses[0], "loss_last": rep.losses[-1],
+        "mean_step_s": sum(rep.step_times) / len(rep.step_times),
+        "failures_recovered": rep.failures_recovered,
+        "straggler_events": rep.straggler_events,
+        "retunes": rep.retunes,
+    }
+    if autonomic:
+        out["kermit"] = autonomic.summary()
+    print(json.dumps(out, indent=1, default=str))
+
+
+if __name__ == "__main__":
+    main()

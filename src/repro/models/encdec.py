@@ -1,0 +1,169 @@
+"""Encoder-decoder transformer (seamless-m4t family).
+
+The speech frontend is a STUB: ``input_specs()`` supplies precomputed frame
+embeddings (B, S_src, d_model); a linear ``frame_proj`` stands in for the
+modality adaptor. Decoder layers: causal self-attention + cross-attention to
+the encoder memory + MLP. Prefill caches both self-KV and cross-KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.sharding.rules import maybe_constrain, act_spec
+
+
+def _policy(tun):
+    from repro.models.transformer import REMAT_POLICY as RP
+    return RP[tun.remat]
+
+
+def enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {"ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": L.attn_init(ks[0], cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def dec_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    p = enc_layer_init(ks[0], cfg, dtype)
+    p["lnx"] = jnp.zeros((cfg.d_model,), dtype)
+    p["xattn"] = L.attn_init(ks[1], cfg, dtype)
+    return p
+
+
+def init(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    ekeys = jax.random.split(ks[0], cfg.enc_layers)
+    dkeys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": L.embed_init(ks[2], cfg.vocab_padded, cfg.d_model, dtype),
+        "frame_proj": L.dense_init(ks[3], cfg.d_model, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: enc_layer_init(k, cfg, dtype))(ekeys),
+        "enc_ln_f": jnp.zeros((cfg.d_model,), dtype),
+        "dec_layers": jax.vmap(lambda k: dec_layer_init(k, cfg, dtype))(dkeys),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def _cross_attn(p, x, mem, cfg, q_chunk, unroll=False):
+    """Cross-attention: queries from x, keys/values from encoder memory."""
+    B, S, _ = x.shape
+    T = mem.shape[1]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    k = jnp.einsum("btd,dh->bth", mem, p["wk"]).reshape(B, T, K, hd)
+    v = jnp.einsum("btd,dh->bth", mem, p["wv"]).reshape(B, T, K, hd)
+    out = L.attention_xla(q, k, v, q_pos=jnp.arange(S), kv_pos=jnp.arange(T),
+                          causal=False, q_chunk=q_chunk, unroll=unroll)
+    out = out.reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), (k, v)
+
+
+def _cross_attn_cached(p, x, xk, xv, cfg):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    out = L.attention_xla(q, xk, xv, q_pos=jnp.arange(S),
+                          kv_pos=jnp.arange(xk.shape[1]), causal=False)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, H * hd), p["wo"])
+
+
+def encode(params, cfg, frames, tun):
+    x = jnp.einsum("bsd,de->bse", frames.astype(params["frame_proj"].dtype),
+                   params["frame_proj"])
+    x = maybe_constrain(x, act_spec(tun))
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, p_l):
+        h, _ = L.attn_apply(p_l["attn"], L.rmsnorm(x, p_l["ln1"], cfg.norm_eps),
+                            cfg, positions=positions, causal=False,
+                            q_chunk=tun.attn_q_chunk, unroll=tun.attn_unroll)
+        x = x + h
+        x = x + L.mlp_apply(p_l["mlp"], L.rmsnorm(x, p_l["ln2"], cfg.norm_eps))
+        return maybe_constrain(x, act_spec(tun)), None
+
+    body = jax.checkpoint(body, policy=_policy(tun))
+    x, _ = lax.scan(body, x, params["enc_layers"],
+                    unroll=cfg.enc_layers if tun.layer_unroll else 1)
+    return L.rmsnorm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def forward(params, cfg, batch, tun, *, return_cache=False):
+    """Train/prefill: encode frames, run decoder over tokens."""
+    mem = encode(params, cfg, batch["frames"], tun)
+    x = params["embed"][batch["tokens"]]
+    x = maybe_constrain(x, act_spec(tun))
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, p_l):
+        h, kv = L.attn_apply(p_l["attn"], L.rmsnorm(x, p_l["ln1"], cfg.norm_eps),
+                             cfg, positions=positions, causal=True,
+                             q_chunk=tun.attn_q_chunk, unroll=tun.attn_unroll)
+        x = x + h
+        hx, xkv = _cross_attn(p_l["xattn"], L.rmsnorm(x, p_l["lnx"], cfg.norm_eps),
+                              mem, cfg, tun.attn_q_chunk, tun.attn_unroll)
+        x = x + hx
+        x = x + L.mlp_apply(p_l["mlp"], L.rmsnorm(x, p_l["ln2"], cfg.norm_eps))
+        x = maybe_constrain(x, act_spec(tun))
+        return x, ((kv, xkv) if return_cache else None)
+
+    body = jax.checkpoint(body, policy=_policy(tun))
+    x, caches = lax.scan(body, x, params["dec_layers"],
+                         unroll=cfg.n_layers if tun.layer_unroll else 1)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    cache = None
+    if return_cache:
+        (k, v), (xk, xv) = caches
+        cache = {"k": k, "v": v, "xk": xk, "xv": xv}
+    return logits, jnp.zeros((), jnp.float32), cache
+
+
+def decode_step(params, cfg, batch, cache, tun):
+    pos = batch["pos"]
+    x = params["embed"][batch["tokens"]]
+    positions = pos[None]
+    S = cache["k"].shape[2]
+    kv_pos = jnp.arange(S)
+    kv_len = pos + 1
+
+    def body(x, xs):
+        p_l, ck, cv, xk, xv = xs
+        q, k1, v1 = L.attn_qkv(p_l["attn"], L.rmsnorm(x, p_l["ln1"], cfg.norm_eps),
+                               cfg, positions)
+        ck = lax.dynamic_update_slice(ck, k1.astype(ck.dtype), (0, pos, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v1.astype(cv.dtype), (0, pos, 0, 0))
+        out = L.attention_xla(q, ck, cv, q_pos=positions, kv_pos=kv_pos,
+                              causal=True, kv_len=kv_len)
+        out = out.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd)
+        x = x + jnp.einsum("bsh,hd->bsd", out, p_l["attn"]["wo"])
+        x = x + _cross_attn_cached(p_l["xattn"],
+                                   L.rmsnorm(x, p_l["lnx"], cfg.norm_eps),
+                                   xk, xv, cfg)
+        x = x + L.mlp_apply(p_l["mlp"], L.rmsnorm(x, p_l["ln2"], cfg.norm_eps))
+        return x, (ck, cv)
+
+    x, (nk, nv) = lax.scan(body, x, (params["dec_layers"], cache["k"],
+                                     cache["v"], cache["xk"], cache["xv"]),
+                           unroll=cfg.n_layers if tun.layer_unroll else 1)
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, dict(cache, k=nk, v=nv)
+
+
+def init_cache(cfg, batch: int, seq: int):
+    dtype = jnp.dtype(cfg.dtype)
+    K, hd, Ld = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    half = seq // 2
+    return {
+        "k": jnp.zeros((Ld, batch, half, K, hd), dtype),
+        "v": jnp.zeros((Ld, batch, half, K, hd), dtype),
+        "xk": jnp.zeros((Ld, batch, half, K, hd), dtype),
+        "xv": jnp.zeros((Ld, batch, half, K, hd), dtype),
+    }

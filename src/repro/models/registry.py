@@ -1,0 +1,5 @@
+"""Model registry: arch name -> (config, model fns)."""
+from repro.models import model
+from repro.configs.registry import get_config, get_shape
+
+__all__ = ["model", "get_config", "get_shape"]

@@ -1,0 +1,261 @@
+"""SSM language models: pure Mamba2 LM and the Zamba2 hybrid.
+
+Zamba2: ``n_layers`` SSD layers; one *shared* attention+MLP block (single set
+of weights) is applied at the start of every ``hybrid_period``-layer group,
+specialised per invocation by LoRA deltas (rank ``lora_rank``). Structure is a
+nested scan: outer over groups (shared block + LoRA as xs), inner over the
+group's SSD layers; trailing remainder layers get their own scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.sharding.rules import maybe_constrain, act_spec
+
+REMAT_POLICY = None  # filled lazily from transformer to avoid import cycle
+
+
+def _policy(tun):
+    from repro.models.transformer import REMAT_POLICY as RP
+    return RP[tun.remat]
+
+
+def ssm_layer_init(key, cfg, dtype):
+    return {"ln": jnp.zeros((cfg.d_model,), dtype),
+            "mixer": M2.mamba2_init(key, cfg, dtype)}
+
+
+def _ssm_block(p_l, x, cfg, tun):
+    h, st = M2.mamba2_apply(p_l["mixer"], L.rmsnorm(x, p_l["ln"], cfg.norm_eps),
+                            cfg, chunk=tun.ssm_chunk,
+                            impl="pallas" if tun.attn_impl == "pallas" else "xla")
+    x = x + h
+    return maybe_constrain(x, act_spec(tun)), st
+
+
+def _ssm_block_step(p_l, x, cfg, state):
+    h, st = M2.mamba2_step(p_l["mixer"], L.rmsnorm(x, p_l["ln"], cfg.norm_eps),
+                           cfg, state)
+    return x + h, st
+
+
+def _logits(params, cfg, x):
+    x = L.rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return L.softcap(logits, cfg.final_softcap)
+
+
+# ---------------------------------------------------------------------------
+# pure Mamba2 LM
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    lkeys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": L.embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: ssm_layer_init(k, cfg, dtype))(lkeys),
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def forward_mamba(params, cfg, batch, tun, *, return_cache=False):
+    x = params["embed"][batch["tokens"]]
+    x = maybe_constrain(x, act_spec(tun))
+
+    def body(x, p_l):
+        x, st = _ssm_block(p_l, x, cfg, tun)
+        return x, (st if return_cache else None)
+
+    body = jax.checkpoint(body, policy=_policy(tun))
+    x, states = lax.scan(body, x, params["layers"],
+                         unroll=cfg.n_layers if tun.layer_unroll else 1)
+    return _logits(params, cfg, x), jnp.zeros((), jnp.float32), states
+
+
+def decode_mamba(params, cfg, batch, cache, tun):
+    x = params["embed"][batch["tokens"]]
+
+    def body(x, xs):
+        p_l, st = xs
+        x, new_st = _ssm_block_step(p_l, x, cfg, st)
+        return x, new_st
+
+    x, new_states = lax.scan(body, x, (params["layers"], cache),
+                             unroll=cfg.n_layers if tun.layer_unroll else 1)
+    return _logits(params, cfg, x), new_states
+
+
+def cache_mamba(cfg, batch: int, seq: int):
+    st = M2.mamba2_init_state(cfg, batch, jnp.dtype(cfg.dtype))
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+
+def _zdims(cfg):
+    G = cfg.n_layers // cfg.hybrid_period
+    R = cfg.n_layers - G * cfg.hybrid_period
+    return G, R
+
+
+def init_zamba(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    G, R = _zdims(cfg)
+    per = cfg.hybrid_period
+    ks = jax.random.split(key, 6)
+    gkeys = jax.random.split(ks[1], G * per).reshape(G, per, 2)
+    params = {
+        "embed": L.embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype),
+        "groups": jax.vmap(jax.vmap(lambda k: ssm_layer_init(k, cfg, dtype)))(gkeys),
+        "shared": {
+            "ln1": jnp.zeros((cfg.d_model,), dtype),
+            "attn": L.attn_init(ks[2], cfg, dtype),
+            "ln2": jnp.zeros((cfg.d_model,), dtype),
+            "mlp": L.mlp_init(ks[3], cfg.d_model, cfg.d_ff, dtype),
+        },
+        "ln_f": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if R:
+        rkeys = jax.random.split(ks[4], R)
+        params["rest"] = jax.vmap(lambda k: ssm_layer_init(k, cfg, dtype))(rkeys)
+    r = cfg.lora_rank
+    lk = jax.random.split(ks[5], 4)
+    H = cfg.n_heads * cfg.hd
+    params["lora"] = {
+        "attn": {"lora_a": (jax.random.normal(lk[0], (G, cfg.d_model, r)) * 0.02).astype(dtype),
+                 "lora_b": jnp.zeros((G, r, H), dtype)},
+        "mlp": {"lora_a": (jax.random.normal(lk[1], (G, cfg.d_model, r)) * 0.02).astype(dtype),
+                "lora_b": jnp.zeros((G, r, cfg.d_ff), dtype)},
+    }
+    return params
+
+
+def _shared_effective(shared, lora):
+    """Shared block weights + this invocation's LoRA deltas."""
+    attn = dict(shared["attn"])
+    attn["wq"] = attn["wq"] + lora["attn"]["lora_a"] @ lora["attn"]["lora_b"]
+    mlp = dict(shared["mlp"])
+    mlp["wi"] = mlp["wi"] + lora["mlp"]["lora_a"] @ lora["mlp"]["lora_b"]
+    return dict(shared, attn=attn, mlp=mlp)
+
+
+def _shared_block(shared, lora, x, cfg, tun, *, positions, cache=None,
+                  write_pos=None, kv_len=None):
+    p = _shared_effective(shared, lora)
+    if write_pos is not None:
+        q, k1, v1 = L.attn_qkv(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                               cfg, positions)
+        ck, cv = cache
+        ck = lax.dynamic_update_slice(ck, k1.astype(ck.dtype), (0, write_pos, 0, 0))
+        cv = lax.dynamic_update_slice(cv, v1.astype(cv.dtype), (0, write_pos, 0, 0))
+        out = L.attention_xla(q, ck, cv, q_pos=positions,
+                              kv_pos=jnp.arange(ck.shape[1]), causal=True,
+                              kv_len=kv_len, q_chunk=tun.attn_q_chunk)
+        out = out.reshape(x.shape[0], 1, cfg.n_heads * cfg.hd)
+        h = jnp.einsum("bsh,hd->bsd", out, p["attn"]["wo"])
+        kv = (ck, cv)
+    else:
+        h, kv = L.attn_apply(p["attn"], L.rmsnorm(x, p["ln1"], cfg.norm_eps),
+                             cfg, positions=positions, causal=True,
+                             q_chunk=tun.attn_q_chunk, unroll=tun.attn_unroll,
+                             impl="pallas" if tun.attn_impl == "pallas" else "xla")
+    x = x + h
+    x = x + L.mlp_apply(p["mlp"], L.rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return maybe_constrain(x, act_spec(tun)), kv
+
+
+def forward_zamba(params, cfg, batch, tun, *, return_cache=False):
+    x = params["embed"][batch["tokens"]]
+    x = maybe_constrain(x, act_spec(tun))
+    positions = jnp.arange(x.shape[1])
+
+    def inner(x, p_l):
+        x, st = _ssm_block(p_l, x, cfg, tun)
+        return x, (st if return_cache else None)
+
+    inner_ck = jax.checkpoint(inner, policy=_policy(tun))
+
+    G, R = _zdims(cfg)
+    per = cfg.hybrid_period
+    un = tun.layer_unroll
+
+    def outer(x, xs):
+        p_group, p_lora = xs
+        x, kv = _shared_block(params["shared"], p_lora, x, cfg, tun,
+                              positions=positions)
+        x, states = lax.scan(inner_ck, x, p_group, unroll=per if un else 1)
+        return x, (states, kv if return_cache else None)
+
+    outer_ck = jax.checkpoint(outer, policy=_policy(tun))
+    x, (g_states, kvs) = lax.scan(outer_ck, x, (params["groups"], params["lora"]),
+                                  unroll=G if un else 1)
+    r_states = None
+    if "rest" in params:
+        x, r_states = lax.scan(inner_ck, x, params["rest"],
+                               unroll=R if un else 1)
+    cache = None
+    if return_cache:
+        cache = {"g_ssm": g_states, "k": kvs[0], "v": kvs[1]}
+        if r_states is not None:
+            cache["r_ssm"] = r_states
+    return _logits(params, cfg, x), jnp.zeros((), jnp.float32), cache
+
+
+def decode_zamba(params, cfg, batch, cache, tun):
+    x = params["embed"][batch["tokens"]]
+    pos = batch["pos"]
+    positions = pos[None]
+    kv_len = pos + 1
+
+    def inner(x, xs):
+        p_l, st = xs
+        return _ssm_block_step(p_l, x, cfg, st)
+
+    def outer(x, xs):
+        p_group, p_lora, sts, ck, cv = xs
+        x, kv = _shared_block(params["shared"], p_lora, x, cfg, tun,
+                              positions=positions, cache=(ck, cv),
+                              write_pos=pos, kv_len=kv_len)
+        x, new_sts = lax.scan(inner, x, (p_group, sts),
+                              unroll=cfg.hybrid_period if tun.layer_unroll else 1)
+        return x, (new_sts, kv[0], kv[1])
+
+    G, R = _zdims(cfg)
+    x, (new_g, nk, nv) = lax.scan(
+        outer, x, (params["groups"], params["lora"], cache["g_ssm"],
+                   cache["k"], cache["v"]),
+        unroll=G if tun.layer_unroll else 1)
+    new_cache = dict(cache, g_ssm=new_g, k=nk, v=nv)
+    if "rest" in params:
+        x, new_r = lax.scan(inner, x, (params["rest"], cache["r_ssm"]),
+                            unroll=R if tun.layer_unroll else 1)
+        new_cache["r_ssm"] = new_r
+    return _logits(params, cfg, x), new_cache
+
+
+def cache_zamba(cfg, batch: int, seq: int):
+    G, R = _zdims(cfg)
+    per = cfg.hybrid_period
+    dtype = jnp.dtype(cfg.dtype)
+    st = M2.mamba2_init_state(cfg, batch, dtype)
+    cache = {
+        "g_ssm": jax.tree_util.tree_map(
+            lambda a: jnp.zeros((G, per) + a.shape, a.dtype), st),
+        "k": jnp.zeros((G, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((G, batch, seq, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+    if R:
+        cache["r_ssm"] = jax.tree_util.tree_map(
+            lambda a: jnp.zeros((R,) + a.shape, a.dtype), st)
+    return cache

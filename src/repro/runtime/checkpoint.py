@@ -1,0 +1,100 @@
+"""Checkpointing: atomic, keep-last-k, resumable, elastic-reshardable.
+
+Layout: <dir>/step_<n>/arrays.npz (flattened pytree, '/'-joined key paths)
+        <dir>/step_<n>/meta.json  (step, pipeline state, tunables, extras)
+Writes go to step_<n>.tmp and are atomically renamed — a crash mid-save never
+corrupts the latest checkpoint (fault-tolerance tests kill mid-run and
+resume). ``restore`` rebuilds against a template pytree and can place leaves
+onto a *different* mesh than the one that saved them (elastic re-mesh:
+resharding is a device_put with the new NamedShardings).
+"""
+from __future__ import annotations
+
+import json
+import shutil
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: dict):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:08d}"
+
+    def save(self, step: int, state, meta: Optional[dict] = None):
+        final = self._step_dir(step)
+        tmp = final.with_suffix(".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **_flatten(state))
+        (tmp / "meta.json").write_text(json.dumps(
+            dict(meta or {}, step=step)))
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._gc()
+        return final
+
+    def steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "meta.json").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, template, step: Optional[int] = None,
+                shardings=None):
+        step = self.latest_step() if step is None else step
+        if step is None:
+            return None, None
+        d = self._step_dir(step)
+        flat = dict(np.load(d / "arrays.npz", allow_pickle=False))
+        state = _unflatten(template, flat)
+        if shardings is not None:
+            state = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s) if s is not None else
+                jnp.asarray(x), state, shardings)
+        else:
+            state = jax.tree_util.tree_map(jnp.asarray, state)
+        meta = json.loads((d / "meta.json").read_text())
+        return state, meta
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,85 @@
+"""Fault tolerance: failure injection, straggler detection, elastic re-mesh.
+
+At 1000+-node scale the design assumptions are: (1) any step can die —
+recovery = restore-latest + replay (the data pipeline is counter-keyed, so
+replay is exact); (2) stragglers present as step-time distribution shifts —
+detected with the SAME Welch machinery KERMIT uses for workload transitions
+(self-healing via the autonomic loop: a persistent straggler surfaces as a
+"new workload" whose optimum the Explorer re-finds); (3) losing nodes changes
+the mesh — ``elastic_restore`` reloads any checkpoint onto a smaller/larger
+mesh since checkpoints are stored unsharded and resharding is device_put.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.change_detector import ChangeDetector
+
+
+class SimulatedNodeFailure(RuntimeError):
+    pass
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule (fail at given step numbers) or
+    probabilistic (rate per step)."""
+    fail_steps: tuple = ()
+    rate: float = 0.0
+    seed: int = 0
+    _fired: set = field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_steps and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedNodeFailure(f"injected node failure at step {step}")
+        if self.rate > 0:
+            rng = np.random.default_rng((self.seed << 16) ^ step)
+            if rng.random() < self.rate:
+                raise SimulatedNodeFailure(f"random node failure at step {step}")
+
+
+class StragglerDetector:
+    """Welch-based step-time shift detector (KERMIT ChangeDetector on the
+    1-D step-time stream) + k×median spike rule for single-step stalls."""
+
+    def __init__(self, window: int = 16, spike_factor: float = 3.0,
+                 alpha: float = 0.001):
+        self.window = window
+        self.spike = spike_factor
+        self.det = ChangeDetector(alpha=alpha, quorum=1.0)
+        self.times: list[float] = []
+        self.events: list[dict] = []
+
+    def observe(self, step: int, step_time: float) -> Optional[dict]:
+        self.times.append(step_time)
+        ev = None
+        n = self.window
+        if len(self.times) >= 4:
+            med = float(np.median(self.times[-4 * n:]))
+            if step_time > self.spike * med:
+                ev = {"step": step, "kind": "spike", "time": step_time,
+                      "median": med}
+        if ev is None and len(self.times) >= 2 * n:
+            a = np.asarray(self.times[-2 * n:-n], np.float32)[:, None]
+            b = np.asarray(self.times[-n:], np.float32)[:, None]
+            if self.det.online((a.mean(0), a.var(0, ddof=1), n),
+                               (b.mean(0), b.var(0, ddof=1), n)) \
+                    and b.mean() > a.mean():
+                ev = {"step": step, "kind": "sustained",
+                      "before": float(a.mean()), "after": float(b.mean())}
+        if ev:
+            self.events.append(ev)
+        return ev
+
+
+def elastic_restore(ckpt_mgr, state_template, mesh, axes_tree):
+    """Restore the latest checkpoint onto ``mesh`` (which may differ from the
+    mesh that saved it). Returns (state, meta) or (None, None)."""
+    from repro.sharding import rules
+    rules.set_mesh(mesh)
+    shardings = rules.tree_shardings(axes_tree) if mesh is not None else None
+    return ckpt_mgr.restore(state_template, shardings=shardings)

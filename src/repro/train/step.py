@@ -1,0 +1,86 @@
+"""Step builders: train_step (grad-accum microbatching, clipping, AdamW,
+optional error-feedback gradient compression) and serve steps.
+
+``train_step(state, batch) -> (state, metrics)`` is the object the dry-run
+lowers; ``serve_step(params, cache, batch) -> (logits, cache)`` for decode
+cells; ``prefill_step(params, batch) -> (logits, cache)``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig, Tunables
+from repro.models import model as M
+from repro.optim.adamw import (OptConfig, adamw_init, adamw_update,
+                               clip_by_global_norm)
+from repro.optim.compression import compress_tree, ef_init
+
+
+def init_train_state(key, cfg: ModelConfig, oc: OptConfig, tun: Tunables):
+    params = M.init(key, cfg)
+    state = {"params": params, "opt": adamw_init(params, oc)}
+    if tun.grad_compression:
+        state["ef"] = ef_init(params)
+    return state
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, tun: Tunables):
+    def train_step(state, batch):
+        params = state["params"]
+
+        def loss_of(p, b):
+            return M.loss_fn(p, cfg, b, tun)
+
+        mb = tun.microbatches
+        if mb > 1:
+            acc_dt = jnp.dtype(tun.accum_dtype)
+            bm = jax.tree_util.tree_map(
+                lambda a: a.reshape((mb, a.shape[0] // mb) + a.shape[1:])
+                if a.ndim > 0 else a, batch)
+
+            def body(carry, b):
+                gs, ls = carry
+                (l, mt), g = jax.value_and_grad(loss_of, has_aux=True)(params, b)
+                gs = jax.tree_util.tree_map(
+                    lambda acc, gg: acc + gg.astype(acc_dt), gs, g)
+                return (gs, ls + l), mt
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (gsum, lsum), mts = lax.scan(body, (zeros, jnp.zeros((), jnp.float32)), bm)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), mts)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+
+        new_state = {}
+        if "ef" in state:
+            grads, new_ef = compress_tree(grads, state["ef"])
+            new_state["ef"] = new_ef
+        grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+        new_params, new_opt, lr = adamw_update(grads, state["opt"], params, oc)
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, tun: Tunables):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch, tun)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, tun: Tunables):
+    def serve_step(params, cache, batch):
+        logits, new_cache = M.decode(params, cfg, batch, cache, tun)
+        return logits, new_cache
+    return serve_step

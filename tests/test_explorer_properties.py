@@ -1,0 +1,66 @@
+"""Property-based tests on Explorer invariants (hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import DEFAULT_TUNABLES
+from repro.core.explorer import Explorer
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+SPACE = {
+    "remat": ["dots", "none", "full"],
+    "microbatches": [1, 2, 4, 8],
+    "attn_q_chunk": [512, 1024, 2048],
+}
+
+
+def _objective_from_seed(seed):
+    rng = np.random.default_rng(seed)
+    w = {k: {v: float(rng.uniform(0, 1)) for v in vals}
+         for k, vals in SPACE.items()}
+
+    def objective(t):
+        return sum(w[k][getattr(t, k)] for k in SPACE)
+    return objective, w
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_global_search_never_worse_than_start(seed):
+    obj, _ = _objective_from_seed(seed)
+    ex = Explorer(SPACE)
+    res = ex.global_search(obj, DEFAULT_TUNABLES)
+    assert res.cost <= obj(DEFAULT_TUNABLES) + 1e-12
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_global_search_optimal_on_separable(seed):
+    """Coordinate descent is exact when the objective is knob-separable."""
+    obj, w = _objective_from_seed(seed)
+    ex = Explorer(SPACE)
+    res = ex.global_search(obj, DEFAULT_TUNABLES)
+    opt = sum(min(w[k].values()) for k in SPACE)
+    assert abs(res.cost - opt) < 1e-9
+    for k in SPACE:
+        assert w[k][getattr(res.best, k)] == min(w[k].values())
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_memoisation_makes_repeats_free(seed):
+    obj, _ = _objective_from_seed(seed)
+    ex = Explorer(SPACE)
+    r1 = ex.global_search(obj, DEFAULT_TUNABLES)
+    r2 = ex.global_search(obj, DEFAULT_TUNABLES)
+    assert r2.evaluations == 0
+    assert r2.cost == r1.cost
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_local_search_stays_on_grid(seed):
+    obj, _ = _objective_from_seed(seed)
+    ex = Explorer(SPACE)
+    start = DEFAULT_TUNABLES.replace(microbatches=2, attn_q_chunk=512)
+    res = ex.local_search(obj, start)
+    for k, vals in SPACE.items():
+        assert getattr(res.best, k) in vals
+    assert res.cost <= obj(start) + 1e-12

@@ -1,0 +1,171 @@
+"""Unit tests for the KERMIT core components against simulator ground truth."""
+import numpy as np
+import pytest
+
+from repro.configs.base import DEFAULT_TUNABLES, Tunables
+from repro.core import (ChangeDetector, Explorer, ForestConfig, KermitAnalyser,
+                        RandomForest, WorkloadDB, characterize, dbscan, kmeans,
+                        make_windows, synthesize)
+from repro.core.explorer import DEFAULT_SPACE
+from repro.core.lstm import PredictorConfig, WorkloadPredictor
+from repro.core.simulator import (ARCHETYPES, archetype_stats, generate,
+                                  generate_hybrid)
+from repro.core.synthesizer import sample_pure
+
+
+def test_change_detector_on_simulated_stream():
+    sim = generate([("dense_train", 10), ("decode_serve", 10),
+                    ("moe_train", 10)], window_size=32, seed=1)
+    det = ChangeDetector()
+    flags = det.batch(sim.windows)
+    acc = np.mean(flags == sim.window_transition)
+    assert acc >= 0.85, acc
+    # all true transitions inside flagged neighbourhood (recall w/ 1 slack)
+    gt = np.where(sim.window_transition)[0]
+    fl = np.where(flags)[0]
+    assert all(np.abs(fl - g).min() <= 1 for g in gt)
+
+
+def test_change_detector_no_false_alarms_steady():
+    sim = generate([("dense_train", 40)], window_size=32, seed=2)
+    det = ChangeDetector()
+    flags = det.batch(sim.windows)
+    assert flags.mean() <= 0.1
+
+
+def test_dbscan_discovers_archetypes():
+    sim = generate([("dense_train", 15), ("decode_serve", 15),
+                    ("long_prefill", 15), ("dense_train", 10)],
+                   window_size=32, seed=3, transition_windows=0)
+    labels = dbscan(sim.windows.mean, eps=0.35, min_pts=4)
+    n_clusters = labels.max() + 1
+    assert n_clusters == 3
+    # same archetype in segments 0 and 3 must land in the same cluster
+    assert labels[0] == labels[-1]
+
+
+def test_dbscan_noise_handling():
+    rng = np.random.default_rng(0)
+    x = np.concatenate([rng.normal(0, .05, (50, 4)),
+                        rng.normal(5, .05, (50, 4)),
+                        rng.uniform(-10, 10, (5, 4))])
+    labels = dbscan(x, eps=0.5, min_pts=4)
+    assert labels.max() + 1 == 2
+    assert (labels == -1).sum() >= 3
+
+
+def test_forest_beats_chance_on_archetypes():
+    X, y = [], []
+    for i, a in enumerate(ARCHETYPES):
+        m, s = archetype_stats(a)
+        rng = np.random.default_rng(i)
+        X.append(m + rng.normal(size=(120, m.size)) * s)
+        y.append(np.full(120, i))
+    X, y = np.concatenate(X, dtype=np.float32), np.concatenate(y)
+    rng = np.random.default_rng(9)
+    p = rng.permutation(len(y))
+    X, y = X[p], y[p]
+    rf = RandomForest(ForestConfig(n_trees=16, depth=6,
+                                   n_classes=len(ARCHETYPES)))
+    rf.fit(X[:600], y[:600])
+    assert rf.score(X[600:], y[600:]) >= 0.9
+
+
+def test_workloaddb_match_insert_drift(tmp_path):
+    db = WorkloadDB(tmp_path, drift_eps=0.5)
+    sim = generate([("dense_train", 20)], window_size=32, seed=4)
+    c1 = characterize(sim.windows.mean)
+    l1 = db.insert(c1)
+    assert db.find_match(c1) == l1
+    # different archetype does not match
+    sim2 = generate([("decode_serve", 20)], window_size=32, seed=5)
+    c2 = characterize(sim2.windows.mean)
+    assert db.find_match(c2) is None
+    # drift: shifted mean triggers flag and clears optimal
+    db.set_config(l1, DEFAULT_TUNABLES.as_dict(), optimal=True)
+    c_shift = dict(c1, mean=c1["mean"] + 0.8)
+    assert db.observe(l1, c_shift)
+    assert db.get(l1).is_drifting and not db.get(l1).has_optimal
+    # persistence round-trip
+    db.save()
+    db2 = WorkloadDB(tmp_path)
+    assert db2.labels() == db.labels()
+    assert db2.get(l1).is_drifting
+
+
+def test_explorer_finds_grid_optimum():
+    target = dict(remat="none", microbatches=4, seq_parallel=True)
+
+    def objective(t: Tunables) -> float:
+        cost = 0.0
+        for k, v in target.items():
+            cost += 0.0 if getattr(t, k) == v else 1.0
+        return cost
+
+    ex = Explorer()
+    res = ex.global_search(objective)
+    assert res.cost == 0.0
+    grid = 1
+    for v in DEFAULT_SPACE.values():
+        grid *= len(v)
+    assert res.evaluations < grid / 10, \
+        f"{res.evaluations} vs grid {grid} — search must be cheap"
+    # memoisation: repeating costs zero evaluations
+    res2 = ex.global_search(objective)
+    assert res2.evaluations == 0
+
+
+def test_explorer_local_beats_start():
+    def objective(t):
+        return abs(t.microbatches - 4) + abs(t.attn_q_chunk - 1024) / 512
+    ex = Explorer()
+    res = ex.local_search(objective, DEFAULT_TUNABLES.replace(microbatches=2))
+    assert res.best.microbatches == 4
+
+
+def test_synthesizer_hybrids_classifiable():
+    pure = {}
+    for i, a in enumerate(["dense_train", "decode_serve", "long_prefill"]):
+        m, s = archetype_stats(a)
+        pure[i] = {"mean": m, "std": s, "n": 100}
+    Xs, ys, classes = synthesize(pure, n_per_class=150, seed=0)
+    assert len(classes) == 3
+    Xp, yp = sample_pure(pure, n_per_class=150)
+    X = np.concatenate([Xp, Xs])
+    y = np.concatenate([yp, ys])
+    rf = RandomForest(ForestConfig(n_trees=24, depth=6,
+                                   n_classes=int(y.max()) + 1)).fit(X, y)
+    # real hybrid stream, never observed: balanced blend of classes 0,1
+    hyb = generate_hybrid(("dense_train", "decode_serve"), n_windows=30,
+                          seed=7)
+    w = make_windows(hyb, 32)
+    pred = rf.predict(w.mean)
+    hybrid_label = [c.label for c in classes if c.pair == (0, 1)][0]
+    acc = np.mean(pred == hybrid_label)
+    assert acc >= 0.6, acc     # zero-shot: never trained on real hybrids
+
+
+def test_predictor_learns_periodic_schedule():
+    # daily-recurrence analogue: A B C A B C ...
+    seq = np.array([0, 1, 2] * 60)
+    pc = PredictorConfig(n_classes=3, hidden=32, window=6, epochs=40)
+    p = WorkloadPredictor(pc).fit(seq)
+    s = p.score(seq)
+    assert s[1] >= 0.95 and s[5] >= 0.95 and s[10] >= 0.95, s
+
+
+def test_analyser_full_cycle(tmp_path):
+    sim = generate([("dense_train", 14), ("decode_serve", 12),
+                    ("moe_train", 14), ("dense_train", 12)],
+                   window_size=32, seed=11)
+    db = WorkloadDB(tmp_path)
+    an = KermitAnalyser(db, dbscan_eps=0.35)
+    rep = an.run(sim.windows)
+    assert rep.clusters == 3
+    assert len(rep.new_labels) == 3
+    # second batch of the same stream: matches, no new labels
+    sim2 = generate([("dense_train", 14), ("moe_train", 12)],
+                    window_size=32, seed=12)
+    rep2 = an.discover(sim2.windows)
+    assert not rep2.new_labels
+    assert set(rep2.matched_labels) <= set(rep.new_labels)

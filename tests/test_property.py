@@ -1,0 +1,102 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.change_detector import ChangeDetector, welch_t
+from repro.core.dbscan import dbscan
+from repro.models.model import cross_entropy
+from repro.optim.adamw import _quant, _dequant
+from repro.optim.compression import apply_ef, quantize, dequantize
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.5, 5.0))
+def test_welch_symmetric(seed, scale):
+    rng = np.random.default_rng(seed)
+    m1, m2 = rng.normal(size=4), rng.normal(size=4)
+    v1, v2 = rng.uniform(0.1, scale, 4), rng.uniform(0.1, scale, 4)
+    t12, _ = welch_t(m1, v1, 16, m2, v2, 16)
+    t21, _ = welch_t(m2, v2, 16, m1, v1, 16)
+    np.testing.assert_allclose(np.asarray(t12), -np.asarray(t21), rtol=1e-6)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_change_detector_identical_windows_never_flagged(seed):
+    rng = np.random.default_rng(seed)
+    m = rng.normal(size=8)
+    v = rng.uniform(0.05, 1.0, 8)
+    det = ChangeDetector(alpha=0.01, quorum=0.25)
+    assert not det.online((m, v, 32), (m.copy(), v.copy(), 32))
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(3.0, 10.0))
+def test_change_detector_large_shift_always_flagged(seed, shift):
+    rng = np.random.default_rng(seed)
+    m = rng.normal(size=8)
+    v = rng.uniform(0.05, 0.5, 8)
+    det = ChangeDetector()
+    assert det.online((m, v, 32), (m + shift * np.sqrt(v), v, 32))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_dbscan_permutation_invariant_partition(seed):
+    rng = np.random.default_rng(seed)
+    x = np.concatenate([rng.normal(0, .1, (20, 3)),
+                        rng.normal(4, .1, (20, 3))]).astype(np.float32)
+    labels = dbscan(x, eps=0.6, min_pts=3)
+    perm = rng.permutation(len(x))
+    labels_p = dbscan(x[perm], eps=0.6, min_pts=3)
+    # partitions must be identical up to label renaming
+    for i in range(len(x)):
+        for j in range(len(x)):
+            same = labels[perm[i]] == labels[perm[j]] and labels[perm[i]] >= 0
+            same_p = labels_p[i] == labels_p[j] and labels_p[i] >= 0
+            assert same == same_p
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 64))
+def test_int8_moment_quant_error_bound(seed, rows):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(rows, 32)) *
+                    rng.uniform(1e-4, 10), jnp.float32)
+    q, s = _quant(x)
+    err = jnp.abs(_dequant(q, s) - x)
+    # per-row scale => error bounded by half a quantization step per row
+    bound = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    assert bool(jnp.all(err <= bound * 0.51 + 1e-12))
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_error_feedback_residual_bounded(seed):
+    """EF invariant: the carried residual never exceeds one quant step, so
+    injected noise cannot accumulate across steps."""
+    rng = np.random.default_rng(seed)
+    ef = jnp.zeros((16,), jnp.float32)
+    for i in range(10):
+        g = jnp.asarray(rng.normal(size=16), jnp.float32)
+        d, ef = apply_ef(g, ef)
+        step = jnp.max(jnp.abs(g + ef)) / 127.0 + 1e-9
+        assert float(jnp.max(jnp.abs(ef))) <= float(step) * 1.01
+
+
+@given(st.integers(2, 200))
+def test_cross_entropy_uniform_logits(v):
+    logits = jnp.zeros((2, 3, v))
+    tgt = jnp.zeros((2, 3), jnp.int32)
+    mask = jnp.ones((2, 3))
+    ce = cross_entropy(logits, tgt, mask)
+    np.testing.assert_allclose(float(ce), np.log(v), rtol=1e-5)
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantize_roundtrip_monotone(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(np.sort(rng.normal(size=64)), jnp.float32)
+    q, s = quantize(x)
+    d = dequantize(q, s)
+    assert bool(jnp.all(jnp.diff(d) >= -1e-6))   # order preserved

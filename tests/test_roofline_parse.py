@@ -1,0 +1,44 @@
+"""Unit tests for the HLO collective parser + roofline-term derivation."""
+import numpy as np
+
+from repro.analysis.roofline import (collective_bytes, roofline_terms,
+                                     PEAK_FLOPS, HBM_BW, LINK_BW)
+
+HLO = """
+ENTRY main {
+  %p = bf16[128,1024]{1,0} parameter(0)
+  %ag = bf16[2048,1024]{1,0} all-gather(bf16[128,1024]{1,0} %p), replica_groups=[16,16]<=[256]T(1,0), dimensions={0}
+  %ar = f32[512,512]{1,0} all-reduce(f32[512,512]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %rs = f32[64,256]{1,0} reduce-scatter(f32[1024,256]{1,0} %y), replica_groups=[1,16]<=[16], dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(bf16[32,32]{1,0} %z), source_target_pairs={{0,1}}
+  %a2a = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-to-all(f32[8,8]{1,0} %u, f32[8,8]{1,0} %v), replica_groups={{0,1}}
+}
+"""
+
+
+def test_collective_bytes_by_kind():
+    out = collective_bytes(HLO)
+    # all-gather: result 2048*1024*2 bytes * (g-1)/g with g=16
+    assert abs(out["all-gather"] - 2048 * 1024 * 2 * 15 / 16) < 1
+    # all-reduce: 512*512*4 * 2(g-1)/g, g=4
+    assert abs(out["all-reduce"] - 512 * 512 * 4 * 2 * 3 / 4) < 1
+    # reduce-scatter: result shard * (g-1), g=16
+    assert abs(out["reduce-scatter"] - 64 * 256 * 4 * 15) < 1
+    # permute: result bytes
+    assert abs(out["collective-permute"] - 32 * 32 * 2) < 1
+    # all-to-all tuple: sum of element buffers * (g-1)/g, g=2
+    assert abs(out["all-to-all"] - 2 * 8 * 8 * 4 * 1 / 2) < 1
+    assert out["total"] == sum(v for k, v in out.items() if k != "total")
+
+
+def test_roofline_terms_and_bottleneck():
+    cost = {"flops": 1.97e12, "bytes accessed": 8.19e9}
+    coll = {"total": 5.0e8}
+    r = roofline_terms(cost, coll, chips=256, model_flops=1.97e12 * 256 * 0.5)
+    np.testing.assert_allclose(r.compute_s, 0.01)
+    np.testing.assert_allclose(r.memory_s, 0.01)
+    np.testing.assert_allclose(r.collective_s, 0.01)
+    assert r.useful_ratio == 0.5
+    coll2 = {"total": 5.0e9}
+    r2 = roofline_terms(cost, coll2, chips=256, model_flops=1.0)
+    assert r2.bottleneck == "collective"

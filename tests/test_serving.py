@@ -1,0 +1,42 @@
+"""Serving path: batched prefill + multi-token decode through the public
+launcher API, across attention/SSM/MoE families; greedy decode determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DEFAULT_TUNABLES
+from repro.launch.serve import serve_batch
+from tests.conftest import tiny
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "mamba2-1.3b",
+                                  "deepseek-moe-16b"])
+def test_serve_batch_families(arch):
+    cfg = tiny(arch, dtype="float32")
+    res = serve_batch(cfg, batch=2, prompt_len=16, gen=6, tun=DEFAULT_TUNABLES)
+    gen = np.asarray(res["generated"])
+    assert gen.shape == (2, 7)            # first token + 6 decoded
+    assert (gen >= 0).all() and (gen < cfg.vocab_padded).all()
+    assert res["decode_tok_per_s"] > 0
+
+
+def test_serve_greedy_deterministic():
+    cfg = tiny("qwen2-1.5b", dtype="float32")
+    r1 = serve_batch(cfg, batch=2, prompt_len=16, gen=5,
+                     tun=DEFAULT_TUNABLES, seed=3)
+    r2 = serve_batch(cfg, batch=2, prompt_len=16, gen=5,
+                     tun=DEFAULT_TUNABLES, seed=3)
+    np.testing.assert_array_equal(np.asarray(r1["generated"]),
+                                  np.asarray(r2["generated"]))
+
+
+def test_serve_respects_tunables():
+    cfg = tiny("qwen2-1.5b", dtype="float32")
+    r1 = serve_batch(cfg, batch=2, prompt_len=16, gen=4,
+                     tun=DEFAULT_TUNABLES.replace(attn_q_chunk=8), seed=1)
+    r2 = serve_batch(cfg, batch=2, prompt_len=16, gen=4,
+                     tun=DEFAULT_TUNABLES, seed=1)
+    # q-chunking is a performance knob: results must be identical
+    np.testing.assert_array_equal(np.asarray(r1["generated"]),
+                                  np.asarray(r2["generated"]))

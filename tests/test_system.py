@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests for the paper's system: the full autonomic
+feedback loop on simulated and live workloads (paper Algorithm 1 + 2)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import DEFAULT_TUNABLES, ShapeSpec, Tunables
+from repro.core import (AutonomicManager, ChangeDetector, Explorer,
+                        KermitAnalyser, KermitMonitor, WorkloadDB, UNKNOWN)
+from repro.core.simulator import generate
+from repro.optim.adamw import OptConfig
+from repro.runtime.loop import Trainer
+from tests.conftest import tiny
+
+
+def test_monitor_pipeline_produces_contexts():
+    sim = generate([("dense_train", 10), ("decode_serve", 10)],
+                   window_size=16, seed=0)
+    mon = KermitMonitor(window_size=16)
+    ctxs = mon.ingest_array(sim.samples)
+    assert len(ctxs) == len(sim.windows)
+    assert all(c.current_label == UNKNOWN for c in ctxs)   # not trained yet
+    assert any(c.in_transition for c in ctxs)
+
+
+def test_full_loop_discovers_then_classifies_then_reuses(tmp_path):
+    """The paper's core scenario: (1) unknown workloads -> default config;
+    (2) off-line discovery learns classes; (3) the plug-in searches once per
+    class; (4) repeats reuse the stored optimum with zero evaluations."""
+    db = WorkloadDB(tmp_path)
+    mon = KermitMonitor(window_size=16)
+    an = KermitAnalyser(db, dbscan_eps=0.35)
+    from repro.core.plugin import KermitPlugin
+    space = {"microbatches": [1, 2, 4], "remat": ["dots", "none"]}
+    plug = KermitPlugin(db, mon, Explorer(space))
+
+    calls = []
+    def objective(t: Tunables) -> float:
+        calls.append(1)
+        return abs(t.microbatches - 2) + (0.0 if t.remat == "none" else 0.5)
+
+    # phase 1: unknown
+    sim = generate([("dense_train", 12)], window_size=16, seed=1)
+    mon.ingest_array(sim.samples)
+    tun = plug.on_resource_request(objective)
+    assert tun == DEFAULT_TUNABLES and not calls
+
+    # off-line catches up
+    rep = an.run(mon.window_series(), synthesize_hybrids=False)
+    assert rep.clusters >= 1
+    mon.classifier = an.classifier
+
+    # phase 2: now classified -> one global search
+    sim2 = generate([("dense_train", 6)], window_size=16, seed=2)
+    mon.ingest_array(sim2.samples)
+    tun = plug.on_resource_request(objective)
+    assert tun.microbatches == 2 and tun.remat == "none"
+    n_evals = len(calls)
+    assert n_evals > 0
+
+    # phase 3: same workload again -> reuse, zero extra evaluations
+    tun2 = plug.on_resource_request(objective)
+    assert tun2 == tun
+    assert len(calls) == n_evals
+    assert plug.stats.reused >= 1
+
+
+def test_drift_triggers_local_search(tmp_path):
+    db = WorkloadDB(tmp_path, drift_eps=0.3)
+    from repro.core.characterize import characterize
+    sim = generate([("dense_train", 16)], window_size=16, seed=3)
+    char = characterize(sim.windows.mean)
+    label = db.insert(char)
+    db.set_config(label, DEFAULT_TUNABLES.replace(microbatches=2).as_dict(),
+                  optimal=True)
+    drifted = dict(char, mean=char["mean"] + 0.5)
+    assert db.observe(label, drifted)
+    rec = db.get(label)
+    assert rec.is_drifting and not rec.has_optimal
+    # plugin now runs a LOCAL search from the stored config
+    mon = KermitMonitor(window_size=16)
+
+    class FakeClf:
+        def predict(self, x):
+            return np.array([label])
+    mon.classifier = FakeClf()
+    mon.ingest_array(generate([("dense_train", 2)], window_size=16,
+                              seed=4).samples)
+    from repro.core.plugin import KermitPlugin
+    plug = KermitPlugin(db, mon, Explorer({"microbatches": [1, 2, 4]}))
+    tun = plug.on_resource_request(lambda t: abs(t.microbatches - 4))
+    assert plug.stats.local_searches == 1
+    assert tun.microbatches == 4
+
+
+def test_live_autonomic_training_retunes():
+    """AutonomicManager wired into a real (tiny) training loop retunes at
+    least once and keeps training stable."""
+    cfg = tiny("qwen2-1.5b")
+    shape = ShapeSpec("t", 64, 4, "train")
+    mgr = AutonomicManager(window_size=3, analysis_interval=4,
+                           explorer=Explorer({"remat": ["dots", "none"]}),
+                           dbscan_eps=0.6)
+    tr = Trainer(cfg, shape, OptConfig(lr=1e-3), DEFAULT_TUNABLES,
+                 autonomic=mgr, seed=0)
+    rep = tr.run(45)
+    assert rep.steps_done == 45
+    assert np.isfinite(rep.losses).all()
+    s = mgr.summary()
+    assert s["windows"] >= 10
+    assert s["known_workloads"] >= 1
