@@ -1,0 +1,108 @@
+"""End-to-end off-line analysis (KWanl) latency: ``KermitAnalyser.run``
+wall time vs window-history length N.
+
+The MAPE-K "A" phase reruns every ``analysis_interval`` windows, so its wall
+time is pure overhead stolen from the managed workload.  This benchmark
+measures the full pipeline (change detection -> streaming DBSCAN ->
+characterize/match -> forest + predictor retraining) in both modes:
+
+* ``fast``  — the compiled analysis path (this repo's default)
+* ``seed``  — the original implementation (interpret-mode dense distance
+              matrix, one-hop label propagation, per-batch Python training),
+              kept alive behind ``KermitAnalyser(fast=False)``
+
+"cold" includes jit tracing/compilation; "warm" is the steady-state cost —
+the one the autonomic loop actually pays after the first interval.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import row
+
+ARCHES = ["dense_train", "decode_serve", "moe_train", "long_prefill"]
+
+
+def _stream(n_windows: int, seed: int = 0):
+    from repro.core.simulator import generate
+    per = max(n_windows // (2 * len(ARCHES)), 4)
+    sched = []
+    while sum(w for _, w in sched) < n_windows:
+        sched.append((ARCHES[len(sched) % len(ARCHES)], per))
+    return generate(sched, window_size=32, seed=seed).windows
+
+
+def _run_once(ws, fast: bool, quality: bool = False):
+    import numpy as np
+    from repro.core.analyser import KermitAnalyser
+    from repro.core.knowledge import WorkloadDB
+    an = KermitAnalyser(WorkloadDB(tempfile.mkdtemp()), fast=fast)
+    t0 = time.perf_counter()
+    rep = an.run(ws)
+    dt = time.perf_counter() - t0
+    if not quality:
+        return dt
+    # quality gate: the speedup must not come from degraded artifacts
+    q = {}
+    wl = rep.window_labels
+    if wl is not None and an.classifier is not None:
+        mask = wl >= 0
+        q["classifier_acc"] = an.classifier.score(ws.mean[mask], wl[mask])
+    if wl is not None and an.predictor is not None:
+        idx = np.where(wl >= 0, np.arange(len(wl)), -1)
+        np.maximum.accumulate(idx, out=idx)
+        seq = np.where(idx >= 0, wl[np.maximum(idx, 0)], 0)
+        q["predictor_acc_h1"] = an.predictor.score(seq)[1]
+    return dt, q
+
+
+QUALITY_SLACK = 0.05       # fast-path accuracy may trail seed by at most this
+
+
+def main(ns=(256, 1024, 2048), seed_max_n: int = 4096, smoke: bool = False):
+    if smoke:
+        ns = (128, 256)
+    results = {}
+    violations = []
+    for n in ns:
+        ws = _stream(n)
+        fast_cold = _run_once(ws, fast=True)
+        fast_warm, fast_q = _run_once(ws, fast=True, quality=True)
+        fast_warm = min(fast_warm, _run_once(ws, fast=True))  # min-of-2
+        entry = {"fast_cold_s": fast_cold, "fast_warm_s": fast_warm,
+                 "fast_quality": fast_q}
+        row(f"analysis_latency/fast_N{n}_cold", f"{fast_cold:.3f}s", "")
+        row(f"analysis_latency/fast_N{n}_warm", f"{fast_warm:.3f}s",
+            ";".join(f"{k}={v:.3f}" for k, v in fast_q.items()))
+        if n <= seed_max_n:
+            seed_cold = _run_once(ws, fast=False)
+            seed_warm, seed_q = _run_once(ws, fast=False, quality=True)
+            seed_warm = min(seed_warm, _run_once(ws, fast=False))  # min-of-2
+            entry.update(seed_cold_s=seed_cold, seed_warm_s=seed_warm,
+                         seed_quality=seed_q,
+                         speedup_cold=seed_cold / max(fast_cold, 1e-9),
+                         speedup_warm=seed_warm / max(fast_warm, 1e-9))
+            row(f"analysis_latency/seed_N{n}_cold", f"{seed_cold:.3f}s", "")
+            row(f"analysis_latency/seed_N{n}_warm", f"{seed_warm:.3f}s",
+                ";".join(f"{k}={v:.3f}" for k, v in seed_q.items()))
+            row(f"analysis_latency/speedup_N{n}",
+                f"{entry['speedup_warm']:.1f}x",
+                f"cold={entry['speedup_cold']:.1f}x;target>=10x@N=2048")
+            # the gate with teeth: a faster analysis that degrades the
+            # trained artifacts is a regression, not a speedup
+            for k, sv in seed_q.items():
+                fv = fast_q.get(k)
+                if fv is not None and fv < sv - QUALITY_SLACK:
+                    violations.append(f"N={n} {k}: fast={fv:.3f} "
+                                      f"seed={sv:.3f}")
+        results[n] = entry
+    if violations:
+        raise AssertionError(
+            "fast-path quality regressed past the allowed slack "
+            f"({QUALITY_SLACK}): " + "; ".join(violations))
+    return results
+
+
+if __name__ == "__main__":
+    main()

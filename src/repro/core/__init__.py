@@ -8,7 +8,7 @@ Knowledge: knowledge (WorkloadDB). Substrate: windows, simulator.
 """
 from repro.core.windows import FEATURES, NUM_FEATURES, WindowSeries, make_windows
 from repro.core.change_detector import ChangeDetector, welch_t
-from repro.core.dbscan import dbscan, kmeans
+from repro.core.dbscan import agglomerative_single_link, dbscan, kmeans
 from repro.core.characterize import characterize, l2_drift
 from repro.core.forest import RandomForest, ForestConfig
 from repro.core.lstm import WorkloadPredictor, PredictorConfig

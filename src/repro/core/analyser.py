@@ -13,9 +13,11 @@ Implements paper Algorithm 2 + the automated training pipeline (§7):
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Optional
 
+import jax
 import numpy as np
 
 from repro.core.change_detector import ChangeDetector
@@ -23,9 +25,17 @@ from repro.core.characterize import characterize
 from repro.core.dbscan import dbscan
 from repro.core.forest import ForestConfig, RandomForest
 from repro.core.knowledge import WorkloadDB
-from repro.core.lstm import PredictorConfig, WorkloadPredictor
+from repro.core.lstm import HORIZONS, PredictorConfig, WorkloadPredictor
 from repro.core.synthesizer import sample_pure, synthesize
 from repro.core.windows import WindowSeries, rate_of_change
+
+
+# fast-path training bounds: bootstrap draws per tree, predictor training
+# subsample / batch / width (see ROADMAP "analysis-path latency budget")
+_FAST_MAX_SAMPLES = 768
+_FAST_PREDICTOR_SAMPLES = 768
+_FAST_PREDICTOR_BATCH = 256
+_FAST_PREDICTOR_HIDDEN = 32
 
 
 @dataclass
@@ -37,18 +47,35 @@ class AnalysisReport:
     matched_labels: list = field(default_factory=list)
     drifted_labels: list = field(default_factory=list)
     window_labels: Optional[np.ndarray] = None   # per-window DB label (-1 noise)
+    discover_seconds: float = 0.0                # A-phase latency accounting
+    train_seconds: float = 0.0
+
+    @property
+    def analysis_seconds(self) -> float:
+        return self.discover_seconds + self.train_seconds
 
 
 class KermitAnalyser:
+    """``fast=True`` (default) runs the compiled analysis path: streaming
+    DBSCAN (kernels/dispatch picks compiled Pallas or XLA tiles), jit-cached
+    forest training and the single-scan predictor train loop.  ``fast=False``
+    reproduces the seed implementation end to end — interpret-mode dense
+    distance matrix, one-hop label propagation and per-batch Python training
+    — and exists for benchmarking (bench_analysis_latency) and parity tests.
+    """
+
     def __init__(self, db: WorkloadDB, *,
                  detector: Optional[ChangeDetector] = None,
                  dbscan_eps: float = 0.35, dbscan_min_pts: int = 4,
-                 max_classes: int = 64):
+                 max_classes: int = 64,
+                 dbscan_impl: str = "auto", fast: bool = True):
         self.db = db
         self.detector = detector or ChangeDetector()
         self.eps = dbscan_eps
         self.min_pts = dbscan_min_pts
         self.max_classes = max_classes
+        self.fast = fast
+        self.dbscan_impl = dbscan_impl if fast else "legacy"
         self.classifier: Optional[RandomForest] = None
         self.transition_classifier: Optional[RandomForest] = None
         self.predictor: Optional[WorkloadPredictor] = None
@@ -56,14 +83,16 @@ class KermitAnalyser:
     # -- Algorithm 2 ----------------------------------------------------------
 
     def discover(self, ws: WindowSeries) -> AnalysisReport:
+        t0 = time.perf_counter()
         rep = AnalysisReport(n_windows=len(ws))
         trans = self.detector.batch(ws)
         rep.n_transition_windows = int(trans.sum())
         steady_idx = np.where(~trans)[0]
         if steady_idx.size == 0:
+            rep.discover_seconds = time.perf_counter() - t0
             return rep
         X = ws.mean[steady_idx]
-        labels = dbscan(X, self.eps, self.min_pts)
+        labels = dbscan(X, self.eps, self.min_pts, impl=self.dbscan_impl)
         rep.clusters = int(labels.max() + 1) if labels.size else 0
 
         window_labels = np.full(len(ws), -1, np.int64)
@@ -83,6 +112,7 @@ class KermitAnalyser:
                 window_labels[members] = new
         rep.window_labels = window_labels
         self.db.save()
+        rep.discover_seconds = time.perf_counter() - t0
         return rep
 
     # -- training pipeline (§7.2 steps 1-9) ------------------------------------
@@ -91,6 +121,7 @@ class KermitAnalyser:
               synthesize_hybrids: bool = True, seed: int = 0,
               predictor_cfg: Optional[PredictorConfig] = None,
               forest_cfg: Optional[ForestConfig] = None):
+        t0 = time.perf_counter()
         wl = rep.window_labels
         if wl is None or (wl >= 0).sum() == 0:
             return self
@@ -113,33 +144,62 @@ class KermitAnalyser:
                 y = np.concatenate([y, yb, ys])
 
         n_classes = int(max(self.db.labels(), default=0)) + 1
+        max_samples = _FAST_MAX_SAMPLES if self.fast else 0
         fc = forest_cfg or ForestConfig(n_trees=24, depth=6,
                                         n_classes=min(n_classes,
-                                                      self.max_classes))
-        self.classifier = RandomForest(fc).fit(X, y, seed=seed)
+                                                      self.max_classes),
+                                        max_samples=max_samples)
+        self.classifier = RandomForest(fc).fit(X, y, seed=seed,
+                                               compiled=self.fast)
 
         # transition classifier on rate-of-change features
         roc = rate_of_change(ws.mean)
         ty = (wl < 0).astype(np.int64)       # 1 = transition/noise window
-        tfc = ForestConfig(n_trees=16, depth=5, n_classes=2)
-        self.transition_classifier = RandomForest(tfc).fit(roc, ty, seed=seed)
+        tfc = ForestConfig(n_trees=16, depth=5, n_classes=2,
+                           max_samples=max_samples)
+        self.transition_classifier = RandomForest(tfc).fit(
+            roc, ty, seed=seed, compiled=self.fast)
 
         # predictor on the label sequence (steady windows carry labels;
-        # transitions inherit the previous label for sequence continuity)
-        seq = wl.copy()
-        for i in range(1, len(seq)):
-            if seq[i] < 0:
-                seq[i] = seq[i - 1]
-        if seq[0] < 0:
-            first = seq[seq >= 0]
-            seq[0] = first[0] if first.size else 0
-        pc = predictor_cfg or PredictorConfig(
-            n_classes=max(int(seq.max()) + 1, 2), epochs=30)
+        # transitions inherit the previous label for sequence continuity) —
+        # forward-fill vectorized via a running max of labelled indices
+        idx = np.where(wl >= 0, np.arange(len(wl)), -1)
+        np.maximum.accumulate(idx, out=idx)
+        first = wl[wl >= 0]
+        seq = np.where(idx >= 0, wl[np.maximum(idx, 0)],
+                       first[0] if first.size else 0)
+        if predictor_cfg is not None:
+            pc = predictor_cfg
+        elif self.fast:
+            # bounded retraining: a uniform subsample of history windows
+            # caps per-analysis compute regardless of N, and a larger batch
+            # + loss-plateau early stopping keeps the compiled train loop
+            # to a handful of epochs
+            n_samples = min(len(seq) - PredictorConfig.window - max(HORIZONS),
+                            _FAST_PREDICTOR_SAMPLES)
+            pc = PredictorConfig(
+                n_classes=max(int(seq.max()) + 1, 2), epochs=30,
+                hidden=_FAST_PREDICTOR_HIDDEN, lr=1e-2,
+                batch=max(16, min(_FAST_PREDICTOR_BATCH, n_samples)),
+                early_stop_tol=1e-2, patience=2, target_loss=0.15,
+                max_train_samples=_FAST_PREDICTOR_SAMPLES)
+        else:
+            pc = PredictorConfig(n_classes=max(int(seq.max()) + 1, 2),
+                                 epochs=30)
         try:
-            self.predictor = WorkloadPredictor(pc).fit(seq, seed=seed)
+            self.predictor = WorkloadPredictor(pc).fit(seq, seed=seed,
+                                                       compiled=self.fast)
         except ValueError:
             self.predictor = None            # sequence too short
         self.db.save()
+        # sync before the artifacts are handed to the monitor, so the
+        # reported latency is honest (JAX dispatch is asynchronous)
+        jax.block_until_ready([
+            None if self.classifier is None else self.classifier.params,
+            None if self.transition_classifier is None
+            else self.transition_classifier.params,
+            None if self.predictor is None else self.predictor.params])
+        rep.train_seconds = time.perf_counter() - t0
         return self
 
     def run(self, ws: WindowSeries, **kw) -> AnalysisReport:

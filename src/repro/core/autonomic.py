@@ -44,13 +44,17 @@ class AutonomicManager:
                  explorer: Optional[Explorer] = None,
                  default: Tunables = DEFAULT_TUNABLES,
                  dbscan_eps: float = 0.35,
-                 drift_eps: float = 1.0):
+                 drift_eps: float = 1.0,
+                 dbscan_impl: str = "auto",
+                 fast_analysis: bool = True):
         self.db = WorkloadDB(root, drift_eps=drift_eps)
         det = detector or ChangeDetector()
         self.monitor = KermitMonitor(window_size=window_size, detector=det,
                                      root=root)
         self.analyser = KermitAnalyser(self.db, detector=det,
-                                       dbscan_eps=dbscan_eps)
+                                       dbscan_eps=dbscan_eps,
+                                       dbscan_impl=dbscan_impl,
+                                       fast=fast_analysis)
         self.plugin = KermitPlugin(self.db, self.monitor,
                                    explorer or Explorer(), default)
         self.analysis_interval = analysis_interval
@@ -82,7 +86,8 @@ class AutonomicManager:
                     ctx.window_id, "analysis", ctx.current_label,
                     detail={"clusters": rep.clusters,
                             "new": rep.new_labels,
-                            "drifted": rep.drifted_labels}))
+                            "drifted": rep.drifted_labels,
+                            "seconds": rep.analysis_seconds}))
 
         # plan/execute at workload boundaries (label change or fresh optimum)
         label = ctx.current_label
@@ -103,7 +108,10 @@ class AutonomicManager:
 
     def summary(self) -> dict:
         s = self.plugin.stats
+        analysis_s = [e.detail.get("seconds", 0.0) for e in self.events
+                      if e.kind == "analysis"]
         return {
+            "last_analysis_seconds": analysis_s[-1] if analysis_s else None,
             "windows": self.monitor._window_id,
             "known_workloads": len([r for r in self.db.records.values()
                                     if not r.is_synthetic]),

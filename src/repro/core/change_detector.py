@@ -10,6 +10,7 @@ off-line as the WorkloadDB characterization matcher (Algorithm 2).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,21 @@ def _erfinv(x):
     return jnp.sign(x) * jnp.sqrt(jnp.sqrt(t1 * t1 - ln / a) - t1)
 
 
+@partial(jax.jit, static_argnames=("n", "alpha", "quorum"))
+def _batch_flags(mean, var, mask, *, n: int, alpha: float, quorum: float):
+    """Vectorized neighbour-pair Welch test over a whole window series —
+    the batch twin of ``ChangeDetector.pair_significant``."""
+    t, dof = welch_t(mean[:-1], var[:-1], n, mean[1:], var[1:], n)
+    sig = jnp.abs(t) > _t_crit(dof, alpha)
+    nf = sig.shape[-1]
+    if mask is not None:
+        sig = sig & mask[None, :]
+        denom = jnp.maximum(jnp.sum(mask), 1)
+    else:
+        denom = nf
+    return jnp.mean(sig.astype(jnp.float32), axis=-1) * nf / denom >= quorum
+
+
 @dataclass
 class ChangeDetector:
     alpha: float = 0.01        # per-feature significance
@@ -70,12 +86,14 @@ class ChangeDetector:
 
     def batch(self, ws: WindowSeries) -> np.ndarray:
         """Transition flags for a window series. Window t is flagged when it
-        differs from window t-1 (paper: non-steady-state w.r.t. neighbours)."""
-        m = jnp.asarray(ws.mean)
-        v = jnp.asarray(ws.var)
-        n = ws.count
-        flags = jax.vmap(lambda a, b, c, d: self.pair_significant(a, b, n, c, d, n))(
-            m[:-1], v[:-1], m[1:], v[1:])
+        differs from window t-1 (paper: non-steady-state w.r.t. neighbours).
+        One jitted program over the whole series (cache shared across
+        detector instances, keyed on shapes + thresholds)."""
+        mask = None if self.feature_mask is None \
+            else jnp.asarray(self.feature_mask)
+        flags = _batch_flags(jnp.asarray(ws.mean), jnp.asarray(ws.var),
+                             mask, n=ws.count, alpha=self.alpha,
+                             quorum=self.quorum)
         return np.concatenate([[False], np.asarray(flags)])
 
     def match_characterization(self, c1: dict, c2: dict) -> bool:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 import itertools
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
 from repro.configs.base import Tunables, DEFAULT_TUNABLES
@@ -46,10 +47,27 @@ class SearchResult:
 
 
 class Explorer:
-    def __init__(self, space: dict | None = None, max_passes: int = 3):
+    """``max_memo`` bounds the evaluation cache (LRU eviction).  The memo
+    stores *measured costs*, which are only meaningful for the workload they
+    were measured under — callers (KermitPlugin) must ``clear()`` it when the
+    active workload label changes or drifts, otherwise one workload's costs
+    silently masquerade as another's."""
+
+    def __init__(self, space: dict | None = None, max_passes: int = 3,
+                 max_memo: int = 4096):
         self.space = dict(space or DEFAULT_SPACE)
         self.max_passes = max_passes
-        self._memo: dict = {}
+        self.max_memo = max_memo
+        self._memo: OrderedDict = OrderedDict()
+
+    def clear(self) -> None:
+        """Drop all memoised costs (workload changed or drifted)."""
+        self._memo.clear()
+
+    def memo_size(self) -> int:
+        # deliberately not __len__: an empty-memo Explorer must stay truthy
+        # (callers use the ``explorer or Explorer()`` idiom)
+        return len(self._memo)
 
     def _key(self, tun: Tunables):
         return tuple(sorted(tun.as_dict().items()))
@@ -61,6 +79,10 @@ class Explorer:
             self._memo[k] = float(objective(tun))
             counter[0] += 1
             trace.append((tun.as_dict(), self._memo[k]))
+            while len(self._memo) > self.max_memo:
+                self._memo.popitem(last=False)
+        else:
+            self._memo.move_to_end(k)
         return self._memo[k]
 
     def global_search(self, objective, start: Tunables = DEFAULT_TUNABLES

@@ -25,6 +25,7 @@ class ForestConfig:
     n_classes: int = 8
     feature_frac: float = 0.7      # per-tree feature subset
     min_leaf: int = 2
+    max_samples: int = 0           # bootstrap draws per tree; 0 = N (classic)
 
 
 def _quantile_grid(x, q: int):
@@ -32,34 +33,39 @@ def _quantile_grid(x, q: int):
     return jnp.quantile(x, qs, axis=0).T          # (F, Q)
 
 
-def _fit_tree(key, x, y, w, grid, fc: ForestConfig):
-    """x: (N,F), y: (N,) int, w: (N,) bootstrap weights, grid: (F,Q).
-    Returns feat (M,), thr (M,), leaf_dist (2^D, C) with M = 2^D - 1."""
-    N, F = x.shape
+def _fit_tree(key, x, y, bins, grid, fc: ForestConfig):
+    """x: (S,F), y: (S,) int — the tree's bootstrap sample, already gathered
+    (duplicates encode multiplicity, so every row has weight 1).  bins:
+    (S,F) int32 quantile-bin indices, precomputed once per forest and
+    gathered per tree.  grid: (F,Q).
+    Returns feat (M,), thr (M,), leaf_dist (2^D, C) with M = 2^D - 1.
+
+    Two scatter optimizations over the seed: per-level histograms scatter a
+    constant 1.0 at the combined (node, feature, bin, class) index instead
+    of C-wide one-hot rows (C-1 of which are zero), and all per-level work
+    is S-sized — with ``fc.max_samples`` the fit cost is decoupled from the
+    window-history length N."""
+    S, F = x.shape
     D, Q, C = fc.depth, fc.n_quantiles, fc.n_classes
     M = 2 ** D - 1
 
-    fkey, _ = jax.random.split(key)
+    fkey, ikey = jax.random.split(key)
     fmask = jax.random.uniform(fkey, (F,)) < fc.feature_frac
-    fmask = fmask.at[jax.random.randint(fkey, (), 0, F)].set(True)  # >=1 feat
+    fmask = fmask.at[jax.random.randint(ikey, (), 0, F)].set(True)  # >=1 feat
 
-    # bin index per (sample, feature): sum of thresholds passed
-    bins = jnp.sum(x[:, :, None] > grid[None, :, :], axis=-1)       # (N,F) in [0,Q]
-    onehot_y = jax.nn.one_hot(y, C) * w[:, None]                    # (N,C)
-
-    local = jnp.zeros((N,), jnp.int32)     # node index within current level
+    local = jnp.zeros((S,), jnp.int32)     # node index within current level
     feat = jnp.zeros((M,), jnp.int32)
     thr = jnp.zeros((M,), jnp.float32)
+    stride_f = (Q + 1) * C                 # flat (bin, class) block per feature
 
     for d in range(D):
         n_nodes = 2 ** d
         base = n_nodes - 1
         # histogram: (node, F, Q+1, C) class-weight counts
-        seg = local[:, None] * (F * (Q + 1)) + \
-            jnp.arange(F)[None, :] * (Q + 1) + bins                 # (N,F)
-        hist = jnp.zeros((n_nodes * F * (Q + 1), C))
-        hist = hist.at[seg.reshape(-1)].add(
-            jnp.repeat(onehot_y, F, axis=0))
+        seg = local[:, None] * (F * stride_f) + \
+            jnp.arange(F)[None, :] * stride_f + bins * C + y[:, None]  # (S,F)
+        hist = jnp.zeros((n_nodes * F * stride_f,), jnp.float32)
+        hist = hist.at[seg].add(1.0)
         hist = hist.reshape(n_nodes, F, Q + 1, C)
 
         cum = jnp.cumsum(hist, axis=2)[:, :, :Q, :]                 # left counts
@@ -86,10 +92,72 @@ def _fit_tree(key, x, y, w, grid, fc: ForestConfig):
         feat = jax.lax.dynamic_update_slice(feat, bf, (base,))
         thr = jax.lax.dynamic_update_slice(thr, bthr.astype(jnp.float32), (base,))
 
-        go_right = x[jnp.arange(N), bf[local]] > bthr[local]
+        go_right = x[jnp.arange(S), bf[local]] > bthr[local]
         local = local * 2 + go_right.astype(jnp.int32)
 
     # recompute leaf assignment cleanly by routing from the root
+    leaf = _route(x, feat, thr, D)
+    dist = jnp.zeros((2 ** D, C)).at[leaf, y].add(1.0)
+    dist = dist / jnp.maximum(dist.sum(-1, keepdims=True), 1e-9)
+    return feat, thr, dist
+
+
+def _fit_tree_seed(key, x, y, w, grid, fc: ForestConfig):
+    """The seed repo's tree fit, frozen verbatim (modulo the fkey/ikey split
+    fix) as the eager baseline for bench_analysis_latency: per-tree bin
+    recomputation and C-wide one-hot histogram scatters."""
+    N, F = x.shape
+    D, Q, C = fc.depth, fc.n_quantiles, fc.n_classes
+    M = 2 ** D - 1
+
+    fkey, ikey = jax.random.split(key)
+    fmask = jax.random.uniform(fkey, (F,)) < fc.feature_frac
+    fmask = fmask.at[jax.random.randint(ikey, (), 0, F)].set(True)  # >=1 feat
+
+    bins = jnp.sum(x[:, :, None] > grid[None, :, :], axis=-1)       # (N,F)
+    onehot_y = jax.nn.one_hot(y, C) * w[:, None]                    # (N,C)
+
+    local = jnp.zeros((N,), jnp.int32)
+    feat = jnp.zeros((M,), jnp.int32)
+    thr = jnp.zeros((M,), jnp.float32)
+
+    for d in range(D):
+        n_nodes = 2 ** d
+        base = n_nodes - 1
+        seg = local[:, None] * (F * (Q + 1)) + \
+            jnp.arange(F)[None, :] * (Q + 1) + bins                 # (N,F)
+        hist = jnp.zeros((n_nodes * F * (Q + 1), C))
+        hist = hist.at[seg.reshape(-1)].add(
+            jnp.repeat(onehot_y, F, axis=0))
+        hist = hist.reshape(n_nodes, F, Q + 1, C)
+
+        cum = jnp.cumsum(hist, axis=2)[:, :, :Q, :]
+        tot = hist.sum(axis=2, keepdims=True)
+        left = cum
+        right = tot - left
+        nl = left.sum(-1)
+        nr = right.sum(-1)
+        gl = 1.0 - jnp.sum(jnp.square(left / jnp.maximum(nl[..., None], 1e-9)), -1)
+        gr = 1.0 - jnp.sum(jnp.square(right / jnp.maximum(nr[..., None], 1e-9)), -1)
+        ntot = jnp.maximum(nl + nr, 1e-9)
+        imp = (nl * gl + nr * gr) / ntot
+        bad = (nl < fc.min_leaf) | (nr < fc.min_leaf) | ~fmask[None, :, None]
+        imp = jnp.where(bad, jnp.inf, imp)
+
+        flat = imp.reshape(n_nodes, F * Q)
+        best = jnp.argmin(flat, axis=1)
+        bf = (best // Q).astype(jnp.int32)
+        bq = best % Q
+        bthr = grid[bf, bq]
+        no_split = ~jnp.isfinite(jnp.min(flat, axis=1))
+        bthr = jnp.where(no_split, jnp.inf, bthr)
+
+        feat = jax.lax.dynamic_update_slice(feat, bf, (base,))
+        thr = jax.lax.dynamic_update_slice(thr, bthr.astype(jnp.float32), (base,))
+
+        go_right = x[jnp.arange(N), bf[local]] > bthr[local]
+        local = local * 2 + go_right.astype(jnp.int32)
+
     leaf = _route(x, feat, thr, D)
     dist = jnp.zeros((2 ** D, C)).at[leaf].add(onehot_y)
     dist = dist / jnp.maximum(dist.sum(-1, keepdims=True), 1e-9)
@@ -107,40 +175,83 @@ def _route(x, feat, thr, depth: int):
     return idx - (2 ** depth - 1)
 
 
+# Module-level jitted fit/predict, cache-keyed on the (hashable, frozen)
+# ForestConfig + array shapes.  The seed version ran the vmapped fit eagerly
+# (op-by-op dispatch) and jitted predict with ``static_argnums=0`` on self,
+# so every RandomForest instance recompiled its own predict — the analysis
+# loop builds fresh forests each interval, which made that a retrace per
+# analysis.  ``keys`` is donated: it is consumed exactly once per fit.
+
+
+def _fit_forest_impl(keys, x, y, grid, fc: ForestConfig):
+    N = x.shape[0]
+    S = min(fc.max_samples, N) if fc.max_samples else N
+    # quantile-bin indices are tree-independent: compute once, not per tree.
+    # bins[n,f] = #{q: grid[f,q] < x[n,f]} — searchsorted is N·F·log Q
+    # instead of the N·F·Q broadcast compare
+    bins = jax.vmap(lambda g, col: jnp.searchsorted(g, col, side="left"),
+                    in_axes=(0, 1), out_axes=1)(grid, x)            # (N,F)
+
+    def one(key):
+        bkey, tkey = jax.random.split(key)
+        rows = jax.random.randint(bkey, (S,), 0, N)     # bootstrap w/ replace
+        return _fit_tree(tkey, x[rows], y[rows], bins[rows], grid, fc)
+
+    return jax.vmap(one)(keys)                          # stacked over trees
+
+
+# two jitted entries sharing one implementation: ``keys`` is consumed
+# exactly once per fit, so it is donated where the runtime can alias
+# (donation is a no-op + warning on CPU).  The backend choice happens at
+# call time in ``fit`` — importing this module must not initialize JAX.
+_fit_forest = partial(jax.jit, static_argnames=("fc",))(_fit_forest_impl)
+_fit_forest_donated = partial(jax.jit, static_argnames=("fc",),
+                              donate_argnums=(0,))(_fit_forest_impl)
+
+
+@partial(jax.jit, static_argnames=("depth",))
+def _forest_proba(params, x, depth: int):
+    feat, thr, dist = params
+
+    def per_tree(f, t, d):
+        leaf = _route(x, f, t, depth)
+        return d[leaf]                                   # (N, C)
+
+    probs = jax.vmap(per_tree)(feat, thr, dist)          # (T, N, C)
+    return probs.mean(0)
+
+
 class RandomForest:
     def __init__(self, fc: ForestConfig):
         self.fc = fc
         self.params = None
         self.grid = None
 
-    def fit(self, x, y, seed: int = 0):
+    def fit(self, x, y, seed: int = 0, compiled: bool = True):
+        """``compiled=False`` runs the seed eager path (benchmark baseline)."""
         fc = self.fc
         x = jnp.asarray(x, jnp.float32)
         y = jnp.asarray(y, jnp.int32)
-        N = x.shape[0]
         self.grid = _quantile_grid(x, fc.n_quantiles)
         keys = jax.random.split(jax.random.PRNGKey(seed), fc.n_trees)
+        if compiled:
+            fit_fn = _fit_forest if jax.default_backend() == "cpu" \
+                else _fit_forest_donated
+            self.params = fit_fn(keys, x, y, self.grid, fc)
+        else:
+            N = x.shape[0]
 
-        def one(key):
-            bkey, tkey = jax.random.split(key)
-            rows = jax.random.randint(bkey, (N,), 0, N)
-            w = jnp.zeros((N,)).at[rows].add(1.0)       # bootstrap weights
-            return _fit_tree(tkey, x, y, w, self.grid, fc)
+            def one(key):
+                bkey, tkey = jax.random.split(key)
+                rows = jax.random.randint(bkey, (N,), 0, N)
+                w = jnp.zeros((N,)).at[rows].add(1.0)
+                return _fit_tree_seed(tkey, x, y, w, self.grid, fc)
 
-        self.params = jax.vmap(one)(keys)               # stacked over trees
+            self.params = jax.vmap(one)(keys)
         return self
 
-    @partial(jax.jit, static_argnums=0)
     def _predict_dist(self, x):
-        feat, thr, dist = self.params
-        D = self.fc.depth
-
-        def per_tree(f, t, d):
-            leaf = _route(x, f, t, D)
-            return d[leaf]                               # (N, C)
-
-        probs = jax.vmap(per_tree)(feat, thr, dist)      # (T, N, C)
-        return probs.mean(0)
+        return _forest_proba(self.params, x, self.fc.depth)
 
     def predict_proba(self, x):
         return np.asarray(self._predict_dist(jnp.asarray(x, jnp.float32)))

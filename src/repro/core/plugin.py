@@ -47,6 +47,7 @@ class KermitPlugin:
         self.default = default
         self.max_staleness_s = max_staleness_s
         self.stats = PluginStats()
+        self._memo_label = None     # workload the explorer memo belongs to
 
     def on_resource_request(self, objective) -> Tunables:
         """Algorithm 1. ``objective``: callable(Tunables) -> measured cost,
@@ -75,6 +76,12 @@ class KermitPlugin:
         if rec.has_optimal and rec.config is not None:
             self.stats.reused += 1
             return Tunables(**rec.config)
+
+        # the memo holds costs measured under one workload; searching for a
+        # different label (or re-searching after drift) must start clean
+        if label != self._memo_label or rec.is_drifting:
+            self.explorer.clear()
+        self._memo_label = label
 
         if rec.is_drifting and rec.config is not None:
             res = self.explorer.local_search(objective,

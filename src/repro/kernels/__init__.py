@@ -1,1 +1,1 @@
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref

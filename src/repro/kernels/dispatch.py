@@ -1,0 +1,61 @@
+"""Backend detection and kernel-implementation dispatch.
+
+Every Pallas kernel in this package has three execution strategies:
+
+* ``"pallas"``           — compiled ``pl.pallas_call`` (TPU/GPU lowering)
+* ``"pallas_interpret"`` — the same kernel through the Pallas interpreter
+                           (CPU-correct but slow; debugging / parity only)
+* ``"xla"``              — a tiled pure-jnp formulation compiled by XLA
+                           (the CPU fast path; memory profile matches the
+                           Pallas kernel — no (N, N) float32 in host RAM)
+
+``resolve("auto")`` picks the fastest strategy for the current backend:
+compiled Pallas on TPU/GPU, XLA tiles on CPU.  Interpret mode is never
+selected implicitly — it must be requested by name (or via the
+``REPRO_KERNEL_IMPL`` environment variable), which replaces the seed
+behaviour of running ``interpret=True`` unconditionally.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+IMPLS = ("pallas", "pallas_interpret", "xla", "ref")
+
+_ENV_VAR = "REPRO_KERNEL_IMPL"
+
+
+def backend() -> str:
+    """The active JAX backend: "cpu", "gpu" or "tpu"."""
+    return jax.default_backend()
+
+
+def supports_compiled_pallas() -> bool:
+    """True when ``pl.pallas_call(..., interpret=False)`` can lower."""
+    return backend() in ("tpu", "gpu")
+
+
+def resolve(impl: str = "auto") -> str:
+    """Map a requested implementation to a concrete one.
+
+    "auto" honours ``REPRO_KERNEL_IMPL`` if set, then picks compiled
+    Pallas on TPU/GPU and the XLA tile path on CPU.  Explicit names pass
+    through (with "pallas" downgraded to interpret mode off-accelerator
+    so parity tests run everywhere).
+    """
+    if impl in ("auto", None):
+        impl = os.environ.get(_ENV_VAR, "").strip().lower() or "auto"
+    if impl == "auto":
+        return "pallas" if supports_compiled_pallas() else "xla"
+    if impl not in IMPLS:
+        raise ValueError(f"unknown kernel impl {impl!r}; expected one of "
+                         f"{('auto',) + IMPLS}")
+    if impl == "pallas" and not supports_compiled_pallas():
+        return "pallas_interpret"
+    return impl
+
+
+def interpret_mode(impl: str = "auto") -> bool:
+    """Whether a ``pl.pallas_call`` for this request must interpret."""
+    return resolve(impl) != "pallas"

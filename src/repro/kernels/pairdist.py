@@ -1,9 +1,23 @@
-"""Pallas TPU kernel: tiled pairwise squared distances (+ ε-neighbour counts).
+"""Pallas TPU kernels: tiled pairwise squared distances and the fused
+ε-neighbourhood kernel (per-row neighbour counts + bit-packed adjacency).
 
 This is KERMIT's workload-discovery hot-spot: DBSCAN over the window history
-is O(N²F) and reruns at every off-line analysis interval. The kernel tiles the
-(N, N) output into MXU-aligned (bm, bn) blocks; each block needs only two
-(b, F) strips resident in VMEM.
+is O(N²F) and reruns at every off-line analysis interval.  Two kernels:
+
+* ``pairdist``            — materializes the (N, N) float32 matrix, tiled
+                            into MXU-aligned (bm, bn) blocks.  Kept for the
+                            oracle path and small N.
+* ``neighbor_adjacency``  — the streaming fast path.  Walks the same (bm, bn)
+                            tile grid but never writes the float32 matrix:
+                            each tile is thresholded at ε² in registers and
+                            reduced to (a) an int32 per-row neighbour-count
+                            accumulator and (b) a bit-packed uint8 adjacency
+                            block (8 columns per byte), an 8×/32× smaller
+                            HBM footprint than bool/float32.
+
+Backend selection lives in ``kernels.dispatch``: compiled Pallas on TPU/GPU,
+a tiled pure-jnp twin (identical arithmetic, identical packing) on CPU, and
+interpret mode only on explicit request.
 
 ref.py oracle: ``ref_pairdist`` below (pure jnp).
 """
@@ -14,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import dispatch
 
 
 def ref_pairdist(x):
@@ -28,6 +44,14 @@ def ref_neighbor_count(x, eps):
     return jnp.sum(ref_pairdist(x) <= eps * eps, axis=1)
 
 
+def ref_adjacency(x, eps):
+    """(N, F) -> (N, N) bool ε-neighbourhood matrix (oracle)."""
+    return ref_pairdist(x) <= eps * eps
+
+
+# -- dense pairdist (oracle / small-N path) -----------------------------------
+
+
 def _kernel(x_ref, y_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)          # (bm, F)
     y = y_ref[...].astype(jnp.float32)          # (bn, F)
@@ -39,8 +63,10 @@ def _kernel(x_ref, y_ref, o_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def pairdist(x, *, block: int = 128, interpret: bool = False):
+def pairdist(x, *, block: int = 128, interpret: bool | None = None):
     """(N, F) -> (N, N) squared distances via pl.pallas_call."""
+    if interpret is None:
+        interpret = dispatch.interpret_mode()
     n, f = x.shape
     bm = min(block, n)
     npad = (-n) % bm
@@ -62,6 +88,159 @@ def pairdist(x, *, block: int = 128, interpret: bool = False):
     return out[:n, :n]
 
 
-def neighbor_count(x, eps, *, block: int = 128, interpret: bool = False):
-    d2 = pairdist(x, block=block, interpret=interpret)
-    return jnp.sum(d2 <= eps * eps, axis=1)
+# -- fused streaming ε-neighbourhood kernel -----------------------------------
+#
+# Bit layout: adjacency column j lives in byte j // 8, bit j % 8 (LSB first).
+# pack/unpack below are the single source of truth for that layout; the XLA
+# twin and the Pallas kernel both go through _pack_bits so the outputs are
+# bit-identical across backends.
+
+def _bit_positions():
+    # built inline (not a module constant) so Pallas kernels don't capture it
+    return jax.lax.iota(jnp.int32, 8)
+
+
+def _pack_bits(adj):
+    """(..., K) bool with K % 8 == 0 -> (..., K // 8) uint8."""
+    b = adj.reshape(adj.shape[:-1] + (adj.shape[-1] // 8, 8))
+    return jnp.sum(b.astype(jnp.int32) << _bit_positions(),
+                   axis=-1).astype(jnp.uint8)
+
+
+def unpack_bits(packed, n_cols: int | None = None):
+    """(..., W) uint8 -> (..., 8 * W) bool; optionally trimmed to n_cols."""
+    bits = (packed[..., None].astype(jnp.int32) >> _bit_positions()) & 1
+    out = bits.reshape(packed.shape[:-1] + (packed.shape[-1] * 8,)) != 0
+    return out if n_cols is None else out[..., :n_cols]
+
+
+def _nbr_kernel(x_ref, y_ref, cnt_ref, adj_ref, *, eps_sq, n, bn,
+                accumulate):
+    """One (bm, bn) tile: threshold at ε² in registers, emit the packed
+    adjacency block (and, where the grid is sequential, accumulate per-row
+    counts over the j axis).  The (bm, bn) float32 tile never leaves VMEM."""
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)          # (bm, F)
+    y = y_ref[...].astype(jnp.float32)          # (bn, F)
+    xx = jnp.sum(x * x, axis=1, keepdims=True)
+    yy = jnp.sum(y * y, axis=1, keepdims=True)
+    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(xx + yy.T - 2.0 * xy, 0.0)
+    # mask padding columns so zero-padded rows never count as neighbours
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    adj = (d2 <= eps_sq) & (col < n)
+
+    if accumulate:
+        @pl.when(j == 0)
+        def _():
+            cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+        cnt_ref[...] += jnp.sum(adj, axis=1).astype(jnp.int32)
+    else:
+        cnt_ref[...] = jnp.sum(adj, axis=1).astype(jnp.int32)
+    adj_ref[...] = _pack_bits(adj)
+
+
+def _sequential_grid(interpret: bool) -> bool:
+    """Output revisiting (the j-axis count accumulation) is only sound where
+    grid cells run in order: the Pallas interpreter and TPU's sequential
+    grid.  GPU grid programs are parallel — accumulate outside the kernel."""
+    return interpret or dispatch.backend() == "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps_sq", "block", "interpret"))
+def _neighbor_adjacency_pallas(x, *, eps_sq: float, block: int,
+                               interpret: bool):
+    n, f = x.shape
+    bm = min(block, max(8, -(-n // 8) * 8))
+    bm = max(8, bm - bm % 8)
+    npad = (-n) % bm
+    if npad:
+        x = jnp.pad(x, ((0, npad), (0, 0)))
+    np_ = x.shape[0]
+    grid = (np_ // bm, np_ // bm)
+    accumulate = _sequential_grid(interpret)
+    kern = functools.partial(_nbr_kernel, eps_sq=eps_sq, n=n, bn=bm,
+                             accumulate=accumulate)
+    counts, packed = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i, j: (i,)),
+            pl.BlockSpec((bm, bm // 8), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_,), jnp.int32),
+            jax.ShapeDtypeStruct((np_, np_ // 8), jnp.uint8),
+        ],
+        interpret=interpret,
+    )(x, x)
+    if not accumulate:
+        # parallel grid: the kernel's counts output only holds the last
+        # j-tile; recount from the packed adjacency (one XLA popcount pass)
+        def strip(pb):
+            return jnp.sum(unpack_bits(pb), axis=1).astype(jnp.int32)
+
+        counts = jax.lax.map(
+            strip, packed.reshape(np_ // bm, bm, np_ // 8)).reshape(np_)
+    return counts, packed
+
+
+@functools.partial(jax.jit, static_argnames=("eps_sq", "block"))
+def _neighbor_adjacency_xla(x, *, eps_sq: float, block: int):
+    """Tiled pure-jnp twin of the Pallas kernel: identical blocking,
+    thresholding and bit packing, compiled by XLA.  Peak memory is one
+    (bm, Npad) strip, never the full (N, N) matrix."""
+    n, f = x.shape
+    x = x.astype(jnp.float32)
+    bm = min(block, max(8, -(-n // 8) * 8))
+    bm = max(8, bm - bm % 8)
+    npad = (-n) % bm
+    if npad:
+        x = jnp.pad(x, ((0, npad), (0, 0)))
+    np_ = x.shape[0]
+    yy = jnp.sum(x * x, axis=1)
+    col_ok = jnp.arange(np_) < n
+
+    def one_strip(xb):                           # (bm, F)
+        xx = jnp.sum(xb * xb, axis=1, keepdims=True)
+        xy = jax.lax.dot_general(xb, x, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(xx + yy[None, :] - 2.0 * xy, 0.0)
+        adj = (d2 <= eps_sq) & col_ok[None, :]
+        return jnp.sum(adj, axis=1).astype(jnp.int32), _pack_bits(adj)
+
+    counts, packed = jax.lax.map(one_strip, x.reshape(np_ // bm, bm, f))
+    return counts.reshape(np_), packed.reshape(np_, np_ // 8)
+
+
+def neighbor_adjacency(x, eps, *, block: int = 128, impl: str = "auto"):
+    """(N, F), ε -> (counts (Npad,) int32, packed (Npad, Npad/8) uint8).
+
+    The streaming DBSCAN front-end: per-row ε-neighbour counts (self
+    included) and the bit-packed adjacency matrix, produced without ever
+    materializing (N, N) float32 in HBM.  Rows ≥ N are zero padding with
+    zero counts and empty adjacency; callers slice ``[:N]`` as needed.
+    """
+    resolved = dispatch.resolve(impl)
+    eps_sq = float(eps) * float(eps)
+    if resolved in ("xla", "ref"):
+        return _neighbor_adjacency_xla(x, eps_sq=eps_sq, block=block)
+    return _neighbor_adjacency_pallas(
+        x, eps_sq=eps_sq, block=block,
+        interpret=(resolved == "pallas_interpret"))
+
+
+def neighbor_count(x, eps, *, block: int = 128, impl: str = "auto",
+                   interpret: bool | None = None):
+    """(N, F), ε -> (N,) int32 neighbour counts (self included)."""
+    if interpret is not None:                    # legacy kwarg compatibility
+        impl = "pallas_interpret" if interpret else "pallas"
+    counts, _ = neighbor_adjacency(x, eps, block=block, impl=impl)
+    return counts[:x.shape[0]]

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 
 from repro.models.layers import attention_xla
 from repro.models.mamba2 import ssd_chunked
-from repro.kernels.pairdist import ref_pairdist, ref_neighbor_count
+from repro.kernels.pairdist import (ref_adjacency, ref_neighbor_count,
+                                    ref_pairdist)
 
 
 def attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0):
@@ -24,4 +25,5 @@ def ssd_ref(x, dt, A, Bm, Cm, chunk=256):
     return y.astype(jnp.float32), s
 
 
-__all__ = ["attention_ref", "ssd_ref", "ref_pairdist", "ref_neighbor_count"]
+__all__ = ["attention_ref", "ssd_ref", "ref_pairdist", "ref_neighbor_count",
+           "ref_adjacency"]

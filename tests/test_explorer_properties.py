@@ -1,6 +1,9 @@
 """Property-based tests on Explorer invariants (hypothesis)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import DEFAULT_TUNABLES
 from repro.core.explorer import Explorer
