@@ -1,0 +1,126 @@
+"""On-line monitoring (KWmon) ingest throughput: windows/s, fast vs seed.
+
+KWmon runs on **every** managed step, so its overhead is a tax on the hot
+path itself (paper §6.4; ROADMAP "on-line monitoring overhead budget").
+This benchmark measures warm ingest throughput with a trained classifier +
+predictor attached — the steady state of a managed loop — in both modes:
+
+* ``fast``  — the fused batched pipeline (this repo's default): one compiled
+              device program per ingested window batch, ring-buffer state.
+* ``seed``  — the original per-sample path behind ``fast=False``: three
+              separate host round-trips (change-detect, classify, predict)
+              per window, per-sample Python ingest loop.
+
+The parity gate has teeth: the two paths must emit bit-equal labels,
+transition flags and predicted-label dicts on the same stream, so the
+speedup cannot come from degraded monitoring decisions.  Target: **>=20x
+warm windows/s at window_size=32 on CPU**.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+WINDOW = 32
+SPEEDUP_TARGET = 20.0
+
+
+def _trained_artifacts(seed: int = 0):
+    from repro.core.analyser import KermitAnalyser
+    from repro.core.knowledge import WorkloadDB
+    from repro.core.simulator import generate
+    sim = generate([("dense_train", 20), ("decode_serve", 20),
+                    ("moe_train", 20)], window_size=WINDOW, seed=seed)
+    an = KermitAnalyser(WorkloadDB(tempfile.mkdtemp()))
+    an.run(sim.windows)
+    return an.classifier, an.predictor
+
+
+def _stream(n_windows: int, seed: int = 1):
+    from repro.core.simulator import generate
+    arches = ["dense_train", "decode_serve", "moe_train", "dense_train"]
+    per = max(n_windows // len(arches), 2)
+    sched = [(a, per) for a in arches]
+    sim = generate(sched, window_size=WINDOW, seed=seed)
+    n = (sim.samples.shape[0] // WINDOW) * WINDOW
+    return sim.samples[:n]
+
+
+def _run(samples, clf, pred, fast: bool):
+    from repro.core.monitor import KermitMonitor
+    mon = KermitMonitor(window_size=WINDOW, classifier=clf, predictor=pred,
+                        fast=fast)
+    t0 = time.perf_counter()
+    ctxs = mon.ingest_array(samples)
+    dt = time.perf_counter() - t0
+    return dt, ctxs
+
+
+def _parity(fast_ctxs, seed_ctxs):
+    """Bit-equality of the monitoring decisions (not timestamps)."""
+    bad = []
+    if [c.current_label for c in fast_ctxs] != \
+            [c.current_label for c in seed_ctxs]:
+        bad.append("labels")
+    if [c.in_transition for c in fast_ctxs] != \
+            [c.in_transition for c in seed_ctxs]:
+        bad.append("transition flags")
+    if [c.predicted for c in fast_ctxs] != [c.predicted for c in seed_ctxs]:
+        bad.append("predicted dicts")
+    return bad
+
+
+def main(smoke: bool = False):
+    clf, pred = _trained_artifacts()
+    n_windows = 128 if smoke else 512          # seed-path run length
+    samples = _stream(n_windows)
+    n_win = samples.shape[0] // WINDOW
+
+    # cold (includes jit tracing) then warm (min of 2; the steady-state cost)
+    fast_cold, fast_ctxs = _run(samples, clf, pred, fast=True)
+    fast_warm = min(_run(samples, clf, pred, fast=True)[0] for _ in range(2))
+    seed_cold, seed_ctxs = _run(samples, clf, pred, fast=False)
+    seed_warm = min(_run(samples, clf, pred, fast=False)[0] for _ in range(2))
+
+    # the gate with teeth: a faster monitor that decides differently is a
+    # regression, not a speedup
+    bad = _parity(fast_ctxs, seed_ctxs)
+    if bad:
+        raise AssertionError(
+            "monitor fast path diverged from the seed path on: "
+            + ", ".join(bad))
+
+    fast_ws, seed_ws = n_win / fast_warm, n_win / seed_warm
+    speedup = fast_ws / seed_ws
+    results = {
+        "n_windows": n_win, "window_size": WINDOW,
+        "fast_cold_s": fast_cold, "fast_warm_s": fast_warm,
+        "seed_cold_s": seed_cold, "seed_warm_s": seed_warm,
+        "fast_windows_per_s": fast_ws, "seed_windows_per_s": seed_ws,
+        "speedup_warm": speedup, "parity": "bit-equal",
+    }
+    row(f"monitor_throughput/fast_N{n_win}_warm", f"{fast_ws:.0f}w/s",
+        f"cold={fast_cold:.3f}s")
+    row(f"monitor_throughput/seed_N{n_win}_warm", f"{seed_ws:.0f}w/s",
+        f"cold={seed_cold:.3f}s")
+    row(f"monitor_throughput/speedup_N{n_win}", f"{speedup:.1f}x",
+        f"target>={SPEEDUP_TARGET:.0f}x;parity=bit-equal")
+
+    if not smoke:
+        # throughput at scale: one long stream through the fast path only
+        big = _stream(4096, seed=2)
+        n_big = big.shape[0] // WINDOW
+        _run(big, clf, pred, fast=True)                       # warm shapes
+        dt = min(_run(big, clf, pred, fast=True)[0] for _ in range(2))
+        results["fast_windows_per_s_N4096"] = n_big / dt
+        row(f"monitor_throughput/fast_N{n_big}_warm", f"{n_big / dt:.0f}w/s",
+            "fast-path scaling run")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -37,8 +37,8 @@ def main(argv=None) -> None:
     from benchmarks import (bench_analysis_latency, bench_autonomic_e2e,
                             bench_change_detector, bench_classifiers,
                             bench_clustering, bench_explorer, bench_kernels,
-                            bench_predictor, bench_roofline, bench_transition,
-                            bench_zsl)
+                            bench_monitor_throughput, bench_predictor,
+                            bench_roofline, bench_transition, bench_zsl)
     suites = [
         ("change_detector[fig9]", bench_change_detector),
         ("classifiers[fig6]", bench_classifiers),
@@ -50,6 +50,7 @@ def main(argv=None) -> None:
         ("roofline[deliverable-g]", bench_roofline),
         ("explorer[claims 30%/92.5%]", bench_explorer),
         ("analysis_latency[perf]", bench_analysis_latency),
+        ("monitor_throughput[perf]", bench_monitor_throughput),
         ("autonomic_e2e", bench_autonomic_e2e),
     ]
     only = [s.strip() for s in args.only.split(",") if s.strip()]

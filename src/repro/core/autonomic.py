@@ -8,10 +8,15 @@ Execute:  the caller applies the returned Tunables (re-jit of the step).
 Knowledge: WorkloadDB persists across runs — labels are never deleted.
 
 The manager is deliberately framework-facing: ``step(telemetry_sample,
-objective)`` is the only thing a training/serving loop must call.
+objective)`` is the only thing a training/serving loop must call;
+``step_batch`` feeds a whole telemetry batch through the monitor's fused
+fast path while preserving per-window semantics (analysis cadence, retunes).
+Event and context state is bounded (``max_events`` / ``monitor_retention``)
+so long-running managed loops hold constant memory.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Callable, Optional
@@ -23,7 +28,7 @@ from repro.core.analyser import KermitAnalyser
 from repro.core.change_detector import ChangeDetector
 from repro.core.explorer import Explorer
 from repro.core.knowledge import WorkloadDB
-from repro.core.monitor import KermitMonitor
+from repro.core.monitor import KermitMonitor, WorkloadContext
 from repro.core.plugin import KermitPlugin
 
 
@@ -46,11 +51,16 @@ class AutonomicManager:
                  dbscan_eps: float = 0.35,
                  drift_eps: float = 1.0,
                  dbscan_impl: str = "auto",
-                 fast_analysis: bool = True):
+                 fast_analysis: bool = True,
+                 fast_monitor: bool = True,
+                 monitor_retention: int = 4096,
+                 max_events: int = 4096):
         self.db = WorkloadDB(root, drift_eps=drift_eps)
         det = detector or ChangeDetector()
         self.monitor = KermitMonitor(window_size=window_size, detector=det,
-                                     root=root)
+                                     root=root, fast=fast_monitor,
+                                     retention=monitor_retention,
+                                     ctx_retention=monitor_retention)
         self.analyser = KermitAnalyser(self.db, detector=det,
                                        dbscan_eps=dbscan_eps,
                                        dbscan_impl=dbscan_impl,
@@ -61,7 +71,9 @@ class AutonomicManager:
         self.current = default
         self._last_label = None
         self._since_analysis = 0
-        self.events: list[AutonomicEvent] = []
+        self.events: deque[AutonomicEvent] = deque(maxlen=max_events)
+        self.events_total = 0
+        self._last_analysis_seconds: Optional[float] = None
 
     # -- the single integration point -----------------------------------------
 
@@ -72,6 +84,34 @@ class AutonomicManager:
         ctx = self.monitor.ingest(sample)
         if ctx is None:
             return self.current
+        return self._on_context(ctx, objective)
+
+    def step_batch(self, samples, objective: Callable[[Tunables], float]
+                   ) -> Tunables:
+        """Feed a whole (N, F) telemetry batch.  Ingestion is chunked at
+        analysis boundaries so classifier/predictor refreshes land exactly
+        where a per-sample ``step`` loop would have placed them; within each
+        chunk the monitor's fused fast path runs one device dispatch."""
+        samples = np.asarray(samples, np.float32)
+        W = self.monitor.window_size
+        i = 0
+        while i < len(samples):
+            win_left = max(self.analysis_interval - self._since_analysis, 1)
+            need = max(win_left * W - self.monitor.pending_samples, 1)
+            chunk = samples[i:i + need]
+            i += len(chunk)
+            for ctx in self.monitor.ingest_array(chunk):
+                self._on_context(ctx, objective)
+        return self.current
+
+    # -- per-window analyze/plan/execute ---------------------------------------
+
+    def _record(self, ev: AutonomicEvent) -> None:
+        self.events.append(ev)
+        self.events_total += 1
+
+    def _on_context(self, ctx: WorkloadContext,
+                    objective: Callable[[Tunables], float]) -> Tunables:
         self._since_analysis += 1
 
         # off-line subsystem cadence (A of MAPE-K)
@@ -82,7 +122,8 @@ class AutonomicManager:
                 rep = self.analyser.run(ws)
                 self.monitor.classifier = self.analyser.classifier
                 self.monitor.predictor = self.analyser.predictor
-                self.events.append(AutonomicEvent(
+                self._last_analysis_seconds = rep.analysis_seconds
+                self._record(AutonomicEvent(
                     ctx.window_id, "analysis", ctx.current_label,
                     detail={"clusters": rep.clusters,
                             "new": rep.new_labels,
@@ -92,31 +133,41 @@ class AutonomicManager:
         # plan/execute at workload boundaries (label change or fresh optimum)
         label = ctx.current_label
         if ctx.in_transition:
-            self.events.append(AutonomicEvent(ctx.window_id, "transition",
-                                              label))
+            self._record(AutonomicEvent(ctx.window_id, "transition", label))
         if label != self._last_label and not ctx.in_transition:
-            tun = self.plugin.on_resource_request(objective)
+            tun = self.plugin.on_resource_request(objective, ctx=ctx)
             if tun != self.current:
-                self.events.append(AutonomicEvent(
+                self._record(AutonomicEvent(
                     ctx.window_id, "retune", label,
                     tunables=tun.as_dict()))
             self.current = tun
             self._last_label = label
         return self.current
 
+    # -- lifecycle -------------------------------------------------------------
+
+    def close(self) -> None:
+        """Flush + release the monitor's JSONL context stream."""
+        self.monitor.close()
+
+    def __enter__(self) -> "AutonomicManager":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
     # -- reporting -------------------------------------------------------------
 
     def summary(self) -> dict:
         s = self.plugin.stats
-        analysis_s = [e.detail.get("seconds", 0.0) for e in self.events
-                      if e.kind == "analysis"]
         return {
-            "last_analysis_seconds": analysis_s[-1] if analysis_s else None,
+            "last_analysis_seconds": self._last_analysis_seconds,
             "windows": self.monitor._window_id,
             "known_workloads": len([r for r in self.db.records.values()
                                     if not r.is_synthetic]),
             "anticipated_hybrids": len([r for r in self.db.records.values()
                                         if r.is_synthetic]),
             "plugin": vars(s).copy(),
-            "events": len(self.events),
+            "events": self.events_total,
+            "events_retained": len(self.events),
         }

@@ -46,11 +46,8 @@ def _erfinv(x):
     return jnp.sign(x) * jnp.sqrt(jnp.sqrt(t1 * t1 - ln / a) - t1)
 
 
-@partial(jax.jit, static_argnames=("n", "alpha", "quorum"))
-def _batch_flags(mean, var, mask, *, n: int, alpha: float, quorum: float):
-    """Vectorized neighbour-pair Welch test over a whole window series —
-    the batch twin of ``ChangeDetector.pair_significant``."""
-    t, dof = welch_t(mean[:-1], var[:-1], n, mean[1:], var[1:], n)
+def _sig_quorum(t, dof, mask, alpha: float, quorum: float):
+    """(pairs, F) Welch statistics -> per-pair transition flags."""
     sig = jnp.abs(t) > _t_crit(dof, alpha)
     nf = sig.shape[-1]
     if mask is not None:
@@ -59,6 +56,32 @@ def _batch_flags(mean, var, mask, *, n: int, alpha: float, quorum: float):
     else:
         denom = nf
     return jnp.mean(sig.astype(jnp.float32), axis=-1) * nf / denom >= quorum
+
+
+@partial(jax.jit, static_argnames=("n", "alpha", "quorum"))
+def _batch_flags(mean, var, mask, *, n: int, alpha: float, quorum: float):
+    """Vectorized neighbour-pair Welch test over a whole window series —
+    the batch twin of ``ChangeDetector.pair_significant``."""
+    t, dof = welch_t(mean[:-1], var[:-1], n, mean[1:], var[1:], n)
+    return _sig_quorum(t, dof, mask, alpha, quorum)
+
+
+def stream_flags(prev_mean, prev_var, mean, var, has_prev, mask, *,
+                 n: int, alpha: float, quorum: float):
+    """Transition flags for a batch of consecutive windows given the carry of
+    the previous window — the jit-friendly streaming twin of ``online``.
+    Traceable (no jit here) so callers can fuse it into a larger program;
+    ``has_prev`` masks the first flag when no previous window exists yet."""
+    am = jnp.concatenate([prev_mean[None], mean])
+    av = jnp.concatenate([prev_var[None], var])
+    t, dof = welch_t(am[:-1], av[:-1], n, am[1:], av[1:], n)
+    flags = _sig_quorum(t, dof, mask, alpha, quorum)
+    return flags.at[0].set(flags[0] & has_prev)
+
+
+_stream_flags_jit = partial(jax.jit,
+                            static_argnames=("n", "alpha", "quorum"))(
+                                stream_flags)
 
 
 @dataclass
@@ -95,6 +118,25 @@ class ChangeDetector:
                              mask, n=ws.count, alpha=self.alpha,
                              quorum=self.quorum)
         return np.concatenate([[False], np.asarray(flags)])
+
+    def stream(self, prev, mean, var, n: int) -> np.ndarray:
+        """Batched on-line flags: ``prev`` is the (mean, var, n) carry of the
+        last emitted window (or None), ``mean``/``var`` are (B, F) for the B
+        new windows of ``n`` samples each.  Single device call; per-pair
+        results match ``online``."""
+        mask = None if self.feature_mask is None \
+            else jnp.asarray(self.feature_mask)
+        if prev is None:
+            pm = jnp.zeros((mean.shape[-1],), jnp.float32)
+            pv = pm
+            has_prev = False
+        else:
+            pm, pv = jnp.asarray(prev[0]), jnp.asarray(prev[1])
+            has_prev = True
+        flags = _stream_flags_jit(pm, pv, jnp.asarray(mean), jnp.asarray(var),
+                                  np.bool_(has_prev), mask, n=n,
+                                  alpha=self.alpha, quorum=self.quorum)
+        return np.asarray(flags)
 
     def match_characterization(self, c1: dict, c2: dict) -> bool:
         """Off-line WorkloadDB matcher: same workload if NOT significantly

@@ -209,8 +209,10 @@ _fit_forest_donated = partial(jax.jit, static_argnames=("fc",),
                               donate_argnums=(0,))(_fit_forest_impl)
 
 
-@partial(jax.jit, static_argnames=("depth",))
-def _forest_proba(params, x, depth: int):
+def forest_proba(params, x, depth: int):
+    """Unjitted batched inference — the jit-friendly single-call entry point,
+    traceable so callers (e.g. the monitor's fused step program) can inline
+    it into a larger compiled program."""
     feat, thr, dist = params
 
     def per_tree(f, t, d):
@@ -219,6 +221,9 @@ def _forest_proba(params, x, depth: int):
 
     probs = jax.vmap(per_tree)(feat, thr, dist)          # (T, N, C)
     return probs.mean(0)
+
+
+_forest_proba = partial(jax.jit, static_argnames=("depth",))(forest_proba)
 
 
 class RandomForest:
@@ -259,6 +264,12 @@ class RandomForest:
     def predict(self, x):
         return np.asarray(jnp.argmax(
             self._predict_dist(jnp.asarray(x, jnp.float32)), axis=-1))
+
+    def predict_device(self, x):
+        """Batched labels as a device array (no host sync) — for callers
+        composing inference into their own compiled programs."""
+        return jnp.argmax(self._predict_dist(jnp.asarray(x, jnp.float32)),
+                          axis=-1)
 
     def score(self, x, y):
         return float(np.mean(self.predict(x) == np.asarray(y)))

@@ -5,20 +5,50 @@ Streams raw agent telemetry (lz zone JSONL, or in-process emits), aggregates
 classification pipeline (ChangeDetector -> WorkloadClassifier ->
 WorkloadPredictor) and emits workload-context objects C_t carrying the current
 label and the predicted labels at t+1 / t+5 / t+10 (paper §6.4).
+
+Two execution paths, mirroring the analyser's fast/seed split:
+
+* ``fast=True`` (default) — the fused batched pipeline.  Each ingested window
+  batch runs **one** compiled device program (``_monitor_step``) that fuses
+  Welch change detection, forest classification and LSTM horizon prediction;
+  the seed path paid three separate host round-trips per window.  Per-window
+  state (mean/var/label) lives in a preallocated ``WindowRing`` and contexts
+  in a bounded deque, so long-running managed loops hold constant memory;
+  JSONL context writes are buffered and interval-flushed (``close()`` or the
+  context-manager exit drains the tail).
+* ``fast=False`` — the seed per-sample path, kept as the benchmark baseline
+  and parity oracle (``bench_monitor_throughput``).  Both paths share the
+  bounded storage and emit bit-identical labels/flags/predictions.
 """
 from __future__ import annotations
 
 import json
 import time
 from dataclasses import dataclass, field, asdict
+from collections import deque
+from functools import partial
 from pathlib import Path
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core.change_detector import ChangeDetector
+from repro.core.change_detector import ChangeDetector, stream_flags
+from repro.core.forest import forest_proba
 from repro.core.knowledge import UNKNOWN
-from repro.core.windows import NUM_FEATURES, make_windows
+from repro.core.lstm import HORIZONS, forward_logits
+from repro.core.windows import WindowRing, make_windows
+
+# fast-path batching: chunks of at most _MAX_BATCH windows, padded up to the
+# nearest bucket so the jit cache holds at most len(_BUCKETS) programs per
+# attached (detector, classifier, predictor) configuration
+_MAX_BATCH = 128
+_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+# observability: fused-program executions ("dispatches") and retraces —
+# tests assert one dispatch per ingested batch and a stable trace count warm
+FASTPATH_STATS = {"dispatches": 0, "traces": 0}
 
 
 @dataclass
@@ -34,29 +64,113 @@ class WorkloadContext:
         return json.dumps(asdict(self))
 
 
+def _monitor_step(mean, var, prev_mean, prev_var, has_prev, hist_carry,
+                  log_len, clf_params, pred_params, mask, *, n: int,
+                  alpha: float, quorum: float, depth: int, pred_window: int,
+                  pred_classes: int):
+    """The fused monitor-step program: change-detect + classify + predict for
+    a whole (B, F) window batch in a single device dispatch.
+
+    ``hist_carry`` holds the last ``pred_window - 1`` emitted labels
+    (front-padded with UNKNOWN) and ``log_len`` the total windows emitted
+    before this batch, so per-row label histories and the seed's
+    history-length gate reconstruct exactly.  Classifier/predictor absence is
+    encoded by passing None params (a static pytree-structure change)."""
+    FASTPATH_STATS["traces"] += 1
+    B = mean.shape[0]
+    trans = stream_flags(prev_mean, prev_var, mean, var, has_prev, mask,
+                         n=n, alpha=alpha, quorum=quorum)
+    if clf_params is not None:
+        raw = jnp.argmax(forest_proba(clf_params, mean, depth), axis=-1)
+        labels = jnp.where(trans, UNKNOWN, raw.astype(jnp.int32))
+    else:
+        labels = jnp.full((B,), UNKNOWN, jnp.int32)
+    if pred_params is not None:
+        W = pred_window
+        full = jnp.concatenate([hist_carry, labels])        # (W-1+B,)
+        hist = full[jnp.arange(B)[:, None] + jnp.arange(W)[None, :]]
+        valid = (log_len + jnp.arange(B) + 1 >= W) & jnp.all(hist >= 0, -1)
+        logits = forward_logits(pred_params,
+                                jax.nn.one_hot(hist, pred_classes))
+        preds = jnp.stack([jnp.where(valid, jnp.argmax(logits[h], -1).
+                                     astype(jnp.int32), UNKNOWN)
+                           for h in HORIZONS])              # (3, B)
+    else:
+        preds = jnp.full((len(HORIZONS), B), UNKNOWN, jnp.int32)
+    return trans, labels, preds
+
+
+_monitor_step_jit = partial(jax.jit, static_argnames=(
+    "n", "alpha", "quorum", "depth", "pred_window", "pred_classes"))(
+        _monitor_step)
+
+
 class KermitMonitor:
     def __init__(self, *, window_size: int = 32,
                  detector: Optional[ChangeDetector] = None,
                  classifier=None, predictor=None,
-                 root: str | Path | None = None):
+                 root: str | Path | None = None,
+                 fast: bool = True,
+                 retention: int = 4096,
+                 ctx_retention: int = 4096,
+                 ctx_flush_every: int = 64):
         self.window_size = window_size
         self.detector = detector or ChangeDetector()
         self.classifier = classifier      # RandomForest | None (untrained yet)
         self.predictor = predictor        # WorkloadPredictor | None
+        self.fast = fast
         self.root = Path(root) if root else None
         self._buf: list = []
         self._prev_window = None
         self._window_id = 0
-        self.window_log: list = []        # (mean, var) per emitted window
-        self.label_log: list = []
-        self.contexts: list = []
+        self._retention = int(retention)
+        if predictor is not None and predictor.pc.window > self._retention:
+            raise ValueError(
+                f"predictor window {predictor.pc.window} exceeds monitor "
+                f"retention {self._retention}")
+        self._ring: Optional[WindowRing] = None   # width-lazy: see _ring_for
+        self.contexts: deque = deque(maxlen=ctx_retention)
+        self._ctx_buf: list[str] = []
+        self._ctx_flush_every = max(int(ctx_flush_every), 1)
         if self.root is not None:
             (self.root / "tz").mkdir(parents=True, exist_ok=True)
             self._ctx_file = (self.root / "tz" / "context.jsonl").open("a")
         else:
             self._ctx_file = None
 
-    # -- streaming ingestion -------------------------------------------------
+    # -- bounded-state views ---------------------------------------------------
+
+    @property
+    def pending_samples(self) -> int:
+        """Raw samples buffered toward the next (incomplete) window."""
+        return len(self._buf)
+
+    def _ring_for(self, mean) -> WindowRing:
+        """The window ring, created on first use with the stream's feature
+        width (the seed list storage accepted any telemetry width, not just
+        NUM_FEATURES — keep that)."""
+        if self._ring is None:
+            self._ring = WindowRing(self._retention, int(np.shape(mean)[-1]),
+                                    self.window_size)
+        return self._ring
+
+    @property
+    def window_log(self):
+        """Compat snapshot of the retained (mean, var) pairs, oldest first
+        (stable copies, like the seed's list of tuples)."""
+        if self._ring is None:
+            return []
+        mean, var, _ = self._ring.ordered(copy=True)
+        return list(zip(mean, var))
+
+    @property
+    def label_log(self) -> np.ndarray:
+        """Snapshot of the retained per-window labels, oldest first."""
+        if self._ring is None:
+            return np.zeros((0,), np.int32)
+        return self._ring.ordered(copy=True)[2]
+
+    # -- streaming ingestion ---------------------------------------------------
 
     def ingest(self, sample) -> Optional[WorkloadContext]:
         """Feed one raw telemetry sample (F,); returns a context when a full
@@ -66,15 +180,38 @@ class KermitMonitor:
             return None
         arr = np.stack(self._buf)
         self._buf.clear()
-        return self._emit(arr.mean(0), arr.var(0, ddof=1))
+        mean, var = arr.mean(0), arr.var(0, ddof=1)
+        if self.fast:
+            return self._emit_fast(mean[None], var[None])[0]
+        return self._emit(mean, var)
 
     def ingest_array(self, samples) -> list:
+        """Feed a whole (N, F) telemetry batch.  On the fast path the batch
+        is reshaped into windows up front and every chunk of windows runs one
+        fused device program; the seed path loops ``ingest`` per sample."""
+        samples = np.asarray(samples, np.float32)
+        if not self.fast:
+            out = []
+            for s in samples:
+                c = self.ingest(s)
+                if c is not None:
+                    out.append(c)
+            return out
+        if self._buf:
+            pending = np.stack(self._buf)
+            self._buf.clear()
+            samples = pending if samples.size == 0 \
+                else np.concatenate([pending, samples])
+        W = self.window_size
+        n_win = samples.shape[0] // W
         out = []
-        for s in np.asarray(samples, np.float32):
-            c = self.ingest(s)
-            if c is not None:
-                out.append(c)
+        if n_win:
+            ws = make_windows(samples, W)       # same math as the analyser
+            out = self._emit_fast(ws.mean, ws.var)
+        self._buf.extend(samples[n_win * W:])
         return out
+
+    # -- seed per-window path (benchmark baseline / parity oracle) -------------
 
     def _emit(self, mean, var) -> WorkloadContext:
         n = self.window_size
@@ -86,17 +223,95 @@ class KermitMonitor:
         label = UNKNOWN
         if self.classifier is not None and not in_trans:
             label = int(self.classifier.predict(mean[None])[0])
-        self.window_log.append((mean, var))
-        self.label_log.append(label)
+        ring = self._ring_for(mean)
+        ring.push(mean, var, label)
 
-        predicted = {1: UNKNOWN, 5: UNKNOWN, 10: UNKNOWN}
-        if self.predictor is not None and len(self.label_log) >= \
+        predicted = {h: UNKNOWN for h in HORIZONS}
+        if self.predictor is not None and ring.total >= \
                 self.predictor.pc.window and label != UNKNOWN:
-            hist = np.asarray(self.label_log[-self.predictor.pc.window:])
+            hist = ring.last_labels(self.predictor.pc.window)
             if (hist >= 0).all():
                 p = self.predictor.predict(hist)
                 predicted = {h: int(v[0]) for h, v in p.items()}
+        return self._new_context(label, predicted, bool(in_trans), mean)
 
+    # -- fused batched path ----------------------------------------------------
+
+    def _emit_fast(self, mean, var) -> list:
+        out = []
+        for i in range(0, len(mean), _MAX_BATCH):
+            out.extend(self._emit_chunk(mean[i:i + _MAX_BATCH],
+                                        var[i:i + _MAX_BATCH]))
+        return out
+
+    def _emit_chunk(self, mean, var) -> list:
+        clf = self.classifier
+        pred = self.predictor
+        if (clf is not None and (getattr(clf, "params", None) is None
+                                 or not hasattr(clf, "fc"))) or \
+                (pred is not None and not hasattr(pred, "params")):
+            # duck-typed classifier/predictor (no trained jax params): the
+            # fused program cannot absorb them — per-window seed fallback
+            return [self._emit(m, v) for m, v in zip(mean, var)]
+
+        B = mean.shape[0]
+        pad = next(b for b in _BUCKETS if b >= B) - B
+        mean_p, var_p = mean, var
+        if pad:
+            mean_p = np.concatenate([mean, np.repeat(mean[-1:], pad, 0)])
+            var_p = np.concatenate([var, np.repeat(var[-1:], pad, 0)])
+
+        det = self.detector
+        mask = None if det.feature_mask is None \
+            else jnp.asarray(det.feature_mask)
+        if self._prev_window is not None:
+            prev_m, prev_v = self._prev_window[0], self._prev_window[1]
+            has_prev = True
+        else:
+            prev_m = np.zeros((mean.shape[1],), np.float32)
+            prev_v = prev_m
+            has_prev = False
+
+        clf_params = None if clf is None else clf.params
+        depth = 0 if clf is None else clf.fc.depth
+        ring = self._ring_for(mean[0])
+        if pred is not None and pred.params is not None:
+            pw = int(pred.pc.window)
+            if pw > ring.capacity:
+                raise ValueError(
+                    f"predictor window {pw} exceeds monitor retention "
+                    f"{ring.capacity}")
+            hist_carry = ring.last_labels(pw - 1)
+            pred_params, pcl = pred.params, int(pred.pc.n_classes)
+        else:
+            pw, pcl = 1, 1
+            hist_carry = np.zeros((0,), np.int32)
+            pred_params = None
+
+        FASTPATH_STATS["dispatches"] += 1
+        trans, labels, preds = _monitor_step_jit(
+            jnp.asarray(mean_p), jnp.asarray(var_p),
+            jnp.asarray(prev_m), jnp.asarray(prev_v), np.bool_(has_prev),
+            jnp.asarray(hist_carry), np.int32(ring.total),
+            clf_params, pred_params, mask,
+            n=self.window_size, alpha=det.alpha, quorum=det.quorum,
+            depth=depth, pred_window=pw, pred_classes=pcl)
+        trans = np.asarray(trans)[:B]
+        labels = np.asarray(labels)[:B]
+        preds = np.asarray(preds)[:, :B]
+
+        self._prev_window = (mean[-1], var[-1], self.window_size)
+        ring.push_batch(mean, var, labels)
+        out = []
+        for t in range(B):
+            predicted = {h: int(preds[i, t]) for i, h in enumerate(HORIZONS)}
+            out.append(self._new_context(int(labels[t]), predicted,
+                                         bool(trans[t]), mean[t]))
+        return out
+
+    # -- context emission + buffered persistence -------------------------------
+
+    def _new_context(self, label, predicted, in_trans, mean):
         ctx = WorkloadContext(
             window_id=self._window_id, timestamp=time.time(),
             current_label=label, predicted=predicted, in_transition=in_trans,
@@ -104,19 +319,48 @@ class KermitMonitor:
         self._window_id += 1
         self.contexts.append(ctx)
         if self._ctx_file is not None:
-            self._ctx_file.write(ctx.to_json() + "\n")
-            self._ctx_file.flush()
+            self._ctx_buf.append(ctx.to_json())
+            if len(self._ctx_buf) >= self._ctx_flush_every:
+                self.flush()
         return ctx
+
+    def flush(self) -> None:
+        """Drain buffered context lines to the JSONL file."""
+        if self._ctx_buf and self._ctx_file is not None:
+            self._ctx_file.write("\n".join(self._ctx_buf) + "\n")
+            self._ctx_file.flush()
+            self._ctx_buf.clear()
+
+    def close(self) -> None:
+        """Flush pending context lines and release the JSONL handle."""
+        if self._ctx_file is not None:
+            self.flush()
+            self._ctx_file.close()
+            self._ctx_file = None
+
+    def __enter__(self) -> "KermitMonitor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):
+        # durability net for callers that never close(): the seed code
+        # flushed every context, so buffered tail lines must not be lost
+        try:
+            self.close()
+        except Exception:
+            pass
 
     # -- batch access for the off-line subsystem ------------------------------
 
-    def window_series(self):
-        if not self.window_log:
+    def window_series(self, copy: bool = False):
+        """Retained windows as a WindowSeries.  Zero-copy (live until the
+        ring wraps) by default — the off-line analyser consumes it
+        synchronously; pass ``copy=True`` to hold it across ingestion."""
+        if self._ring is None or len(self._ring) == 0:
             return None
-        from repro.core.windows import WindowSeries
-        mean = np.stack([m for m, _ in self.window_log])
-        var = np.stack([v for _, v in self.window_log])
-        return WindowSeries(mean, var, self.window_size)
+        return self._ring.series(copy)
 
     def latest_context(self) -> Optional[WorkloadContext]:
         return self.contexts[-1] if self.contexts else None

@@ -49,13 +49,24 @@ class KermitPlugin:
         self.stats = PluginStats()
         self._memo_label = None     # workload the explorer memo belongs to
 
-    def on_resource_request(self, objective) -> Tunables:
+    def on_resource_request(self, objective,
+                            ctx: WorkloadContext | None = None) -> Tunables:
         """Algorithm 1. ``objective``: callable(Tunables) -> measured cost,
-        evaluated only when a search actually runs."""
+        evaluated only when a search actually runs.  ``ctx`` pins the request
+        to a specific workload context (batch ingestion processes windows
+        after the monitor has already moved on); defaults to the monitor's
+        latest."""
         self.stats.requests += 1
-        ctx = self.monitor.latest_context()
+        pinned = ctx is not None
+        if ctx is None:
+            ctx = self.monitor.latest_context()
 
-        if ctx is None or (time.time() - ctx.timestamp) > self.max_staleness_s:
+        # staleness guards against a desynced monitor when *pulling* the
+        # latest context; a pinned context is the right one by definition
+        # (batch processing may reach it long after ingestion)
+        if ctx is None or (not pinned and
+                           (time.time() - ctx.timestamp) >
+                           self.max_staleness_s):
             if ctx is not None:
                 log.error("workload context stale (%.1fs) — using default; "
                           "monitor out of sync", time.time() - ctx.timestamp)

@@ -57,6 +57,83 @@ class WindowSeries:
                             np.concatenate([self.var, other.var]), self.count)
 
 
+class WindowRing:
+    """Preallocated bounded storage for per-window monitor state (mean, var,
+    label).  Retains the most recent ``capacity`` windows; ``total`` counts
+    every window ever pushed, so window ids and history-length gates keep
+    working after eviction.  Chronological reads (``ordered``/``series``) are
+    zero-copy views until the ring wraps, then a single ordered copy."""
+
+    def __init__(self, capacity: int, n_features: int, count: int):
+        if capacity < 2:
+            raise ValueError("WindowRing capacity must be >= 2")
+        self.capacity = int(capacity)
+        self.count = int(count)            # raw samples per window
+        self.mean = np.zeros((self.capacity, n_features), np.float32)
+        self.var = np.zeros((self.capacity, n_features), np.float32)
+        self.label = np.full((self.capacity,), -1, np.int32)
+        self.total = 0                     # windows ever pushed (monotone)
+
+    def __len__(self):
+        return min(self.total, self.capacity)
+
+    def push(self, mean, var, label):
+        h = self.total % self.capacity
+        self.mean[h] = mean
+        self.var[h] = var
+        self.label[h] = label
+        self.total += 1
+
+    def push_batch(self, mean, var, label):
+        b = len(label)
+        if b > self.capacity:
+            # the batch alone overfills the ring: the leading windows would
+            # be evicted immediately, so only the tail is written
+            off = b - self.capacity
+            self.total += off
+            mean, var, label = mean[off:], var[off:], label[off:]
+            b = self.capacity
+        idx = (self.total + np.arange(b)) % self.capacity
+        self.mean[idx] = mean
+        self.var[idx] = var
+        self.label[idx] = label
+        self.total += b
+
+    def ordered(self, copy: bool = False):
+        """Chronological (mean, var, label) of the retained windows.
+
+        Until the ring wraps these are zero-copy views that later pushes
+        mutate in place — fine for the synchronous consume-then-discard
+        analysis cadence; pass ``copy=True`` to hold a stable snapshot."""
+        n = len(self)
+        if self.total <= self.capacity:
+            m, v, l = self.mean[:n], self.var[:n], self.label[:n]
+            return (m.copy(), v.copy(), l.copy()) if copy else (m, v, l)
+        h = self.total % self.capacity
+        return (np.concatenate([self.mean[h:], self.mean[:h]]),
+                np.concatenate([self.var[h:], self.var[:h]]),
+                np.concatenate([self.label[h:], self.label[:h]]))
+
+    def series(self, copy: bool = False) -> "WindowSeries":
+        m, v, _ = self.ordered(copy)
+        return WindowSeries(m, v, self.count)
+
+    def last_labels(self, k: int) -> np.ndarray:
+        """Last ``k`` labels, chronological, front-padded with -1 when fewer
+        than ``k`` windows have been pushed."""
+        if k <= 0:
+            return np.zeros((0,), np.int32)
+        if k > self.capacity:
+            raise ValueError(f"last_labels({k}) exceeds retention "
+                             f"{self.capacity}")
+        got = min(k, len(self))
+        out = np.full((k,), -1, np.int32)
+        if got:
+            idx = (self.total - got + np.arange(got)) % self.capacity
+            out[k - got:] = self.label[idx]
+        return out
+
+
 def make_windows(samples, window_size: int) -> WindowSeries:
     """samples: (N, F) raw telemetry -> floor(N/W) observation windows."""
     samples = np.asarray(samples, np.float32)

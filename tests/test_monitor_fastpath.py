@@ -1,0 +1,391 @@
+"""Parity + behaviour tests for the fused on-line monitoring fast path.
+
+The fused batched pipeline (one compiled device program per ingested window
+batch) must emit *bit-equal* labels, transition flags and predicted-label
+dicts vs the seed per-sample path (``fast=False``); streaming (per-sample
+``ingest``) and batched (``ingest_array``) fast-path entries must agree; the
+ring-buffer state must survive wraparound; JSONL context output must match
+the seed path after ``close()``.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import monitor as monitor_mod
+from repro.core.forest import ForestConfig, RandomForest
+from repro.core.knowledge import UNKNOWN
+from repro.core.lstm import PredictorConfig, WorkloadPredictor
+from repro.core.monitor import FASTPATH_STATS, KermitMonitor
+from repro.core.simulator import ARCHETYPES, archetype_stats, generate
+from repro.core.windows import NUM_FEATURES, WindowRing, make_windows
+
+WINDOW = 16
+
+
+@pytest.fixture(scope="module")
+def artifacts():
+    """A small trained classifier + predictor (deterministic)."""
+    names = ["dense_train", "decode_serve", "moe_train"]
+    X, y = [], []
+    for i, a in enumerate(names):
+        m, s = archetype_stats(a)
+        rng = np.random.default_rng(i)
+        X.append(m + rng.normal(size=(120, m.size)).astype(np.float32) * s)
+        y.append(np.full(120, i))
+    X = np.concatenate(X, dtype=np.float32)
+    y = np.concatenate(y)
+    clf = RandomForest(ForestConfig(n_trees=8, depth=5,
+                                    n_classes=len(names))).fit(X, y)
+    seq = np.array([0, 1, 2] * 40)
+    pred = WorkloadPredictor(PredictorConfig(
+        n_classes=len(names), hidden=16, window=6, epochs=15)).fit(seq)
+    return clf, pred
+
+
+def _stream(seed=0, n=10):
+    sim = generate([("dense_train", n), ("decode_serve", n),
+                    ("dense_train", n)], window_size=WINDOW, seed=seed)
+    return sim.samples
+
+
+def _decisions(ctxs):
+    return ([c.current_label for c in ctxs],
+            [c.in_transition for c in ctxs],
+            [c.predicted for c in ctxs],
+            [c.window_id for c in ctxs])
+
+
+def _run(samples, *, fast, batch, clf=None, pred=None, **kw):
+    mon = KermitMonitor(window_size=WINDOW, classifier=clf, predictor=pred,
+                        fast=fast, **kw)
+    if batch:
+        return mon.ingest_array(samples), mon
+    out = []
+    for s in samples:
+        c = mon.ingest(s)
+        if c is not None:
+            out.append(c)
+    return out, mon
+
+
+# -- fast-vs-seed and streaming-vs-batch parity -------------------------------
+
+
+def test_fast_batch_matches_seed_trained(artifacts):
+    clf, pred = artifacts
+    samples = _stream()
+    seed_ctxs, _ = _run(samples, fast=False, batch=False, clf=clf, pred=pred)
+    fast_ctxs, _ = _run(samples, fast=True, batch=True, clf=clf, pred=pred)
+    assert _decisions(fast_ctxs) == _decisions(seed_ctxs)
+    # predictions actually fire (the stream has steady labelled runs)
+    assert any(v != UNKNOWN for c in seed_ctxs for v in c.predicted.values())
+
+
+def test_fast_streaming_matches_fast_batch(artifacts):
+    clf, pred = artifacts
+    samples = _stream(seed=3)
+    a, _ = _run(samples, fast=True, batch=False, clf=clf, pred=pred)
+    b, _ = _run(samples, fast=True, batch=True, clf=clf, pred=pred)
+    assert _decisions(a) == _decisions(b)
+
+
+def test_fast_matches_seed_untrained():
+    samples = _stream(seed=5)
+    seed_ctxs, _ = _run(samples, fast=False, batch=False)
+    fast_ctxs, _ = _run(samples, fast=True, batch=True)
+    assert _decisions(fast_ctxs) == _decisions(seed_ctxs)
+    assert all(c.current_label == UNKNOWN for c in fast_ctxs)
+    assert any(c.in_transition for c in fast_ctxs)
+
+
+def test_fast_classifier_only_matches_seed(artifacts):
+    clf, _ = artifacts
+    samples = _stream(seed=6)
+    seed_ctxs, _ = _run(samples, fast=False, batch=False, clf=clf)
+    fast_ctxs, _ = _run(samples, fast=True, batch=True, clf=clf)
+    assert _decisions(fast_ctxs) == _decisions(seed_ctxs)
+
+
+def test_partial_windows_carry_across_batches(artifacts):
+    clf, pred = artifacts
+    samples = _stream(seed=7)
+    whole, _ = _run(samples, fast=True, batch=True, clf=clf, pred=pred)
+    mon = KermitMonitor(window_size=WINDOW, classifier=clf, predictor=pred)
+    split = []     # ragged batches that straddle window boundaries
+    for lo in range(0, len(samples), 3 * WINDOW + 5):
+        split.extend(mon.ingest_array(samples[lo:lo + 3 * WINDOW + 5]))
+    assert _decisions(split) == _decisions(whole)
+
+
+def test_duck_typed_classifier_falls_back():
+    class FakeClf:                      # no .params: seed-path fallback
+        def predict(self, x):
+            return np.array([7])
+
+    samples = _stream(seed=8)
+    mon = KermitMonitor(window_size=WINDOW, classifier=FakeClf())
+    ctxs = mon.ingest_array(samples)
+    assert any(c.current_label == 7 for c in ctxs)
+
+
+def test_duck_typed_predictor_falls_back(artifacts):
+    clf, _ = artifacts
+
+    class FakePred:                     # no .params: seed-path fallback
+        class pc:
+            window = 2
+
+        def predict(self, hist):
+            return {h: np.array([5]) for h in (1, 5, 10)}
+
+    samples = _stream(seed=8)
+    mon = KermitMonitor(window_size=WINDOW, classifier=clf,
+                        predictor=FakePred())
+    ctxs = mon.ingest_array(samples)
+    assert any(c.predicted[1] == 5 for c in ctxs)
+
+
+def test_detector_stream_matches_online():
+    from repro.core.change_detector import ChangeDetector
+    ws = make_windows(_stream(seed=21), WINDOW)
+    det = ChangeDetector()
+    want = [det.online((ws.mean[i], ws.var[i], WINDOW),
+                       (ws.mean[i + 1], ws.var[i + 1], WINDOW))
+            for i in range(len(ws) - 1)]
+    got = det.stream((ws.mean[0], ws.var[0], WINDOW),
+                     ws.mean[1:], ws.var[1:], WINDOW)
+    np.testing.assert_array_equal(got, want)
+    # no previous window: first flag masked off
+    got0 = det.stream(None, ws.mean, ws.var, WINDOW)
+    assert not got0[0]
+    np.testing.assert_array_equal(got0[1:], want)
+
+
+def test_forest_predict_device_matches_predict(artifacts):
+    clf, _ = artifacts
+    x = make_windows(_stream(seed=22), WINDOW).mean
+    np.testing.assert_array_equal(np.asarray(clf.predict_device(x)),
+                                  clf.predict(x))
+
+
+def test_custom_feature_width_supported():
+    # seed storage accepted any telemetry width; the ring must stay lazy
+    rng = np.random.default_rng(0)
+    samples = rng.normal(size=(8 * WINDOW, 5)).astype(np.float32)
+    samples[4 * WINDOW:] += 3.0
+    mon = KermitMonitor(window_size=WINDOW)
+    ctxs = mon.ingest_array(samples)
+    assert len(ctxs) == 8
+    assert mon.window_series().mean.shape == (8, 5)
+    assert any(c.in_transition for c in ctxs)
+
+
+def test_retention_smaller_than_predictor_window_fails_fast(artifacts):
+    _, pred = artifacts          # pc.window == 6
+    with pytest.raises(ValueError, match="retention"):
+        KermitMonitor(window_size=WINDOW, predictor=pred, retention=4)
+
+
+# -- one dispatch per ingested batch ------------------------------------------
+
+
+def test_single_dispatch_per_batch(artifacts):
+    clf, pred = artifacts
+    samples = _stream(seed=9)
+    _run(samples, fast=True, batch=True, clf=clf, pred=pred)   # warm shapes
+    before = dict(FASTPATH_STATS)
+    ctxs, _ = _run(samples, fast=True, batch=True, clf=clf, pred=pred)
+    assert len(ctxs) == len(samples) // WINDOW
+    assert FASTPATH_STATS["dispatches"] - before["dispatches"] == 1
+    assert FASTPATH_STATS["traces"] == before["traces"]    # warm: no retrace
+
+
+def test_chunking_above_max_batch(artifacts):
+    clf, pred = artifacts
+    n_win = monitor_mod._MAX_BATCH + 40
+    rng = np.random.default_rng(0)
+    m, s = archetype_stats("dense_train")
+    samples = (m + rng.normal(size=(n_win * WINDOW, NUM_FEATURES)) * s
+               ).astype(np.float32)
+    _run(samples, fast=True, batch=True, clf=clf, pred=pred)   # warm shapes
+    before = FASTPATH_STATS["dispatches"]
+    ctxs, _ = _run(samples, fast=True, batch=True, clf=clf, pred=pred)
+    assert len(ctxs) == n_win
+    assert FASTPATH_STATS["dispatches"] - before == 2          # two chunks
+
+
+# -- bounded streaming state ---------------------------------------------------
+
+
+def test_ring_wraparound_keeps_latest_windows():
+    samples = _stream(seed=10)
+    n_win = len(samples) // WINDOW
+    mon = KermitMonitor(window_size=WINDOW, retention=8, ctx_retention=8)
+    ctxs = mon.ingest_array(samples)
+    assert len(ctxs) == n_win
+    ws = mon.window_series()
+    assert len(ws) == 8
+    want = make_windows(samples, WINDOW)
+    np.testing.assert_array_equal(ws.mean, want.mean[-8:])
+    np.testing.assert_array_equal(ws.var, want.var[-8:])
+    assert len(mon.contexts) == 8
+    assert mon.contexts[-1].window_id == n_win - 1     # ids keep counting
+
+
+def test_ring_wraparound_parity_with_seed(artifacts):
+    # eviction must not disturb the label-history carry used for prediction
+    clf, pred = artifacts
+    samples = _stream(seed=11)
+    seed_ctxs, _ = _run(samples, fast=False, batch=False, clf=clf, pred=pred)
+    fast_ctxs, _ = _run(samples, fast=True, batch=True, clf=clf, pred=pred,
+                        retention=12)
+    assert _decisions(fast_ctxs) == _decisions(seed_ctxs)
+
+
+def test_window_ring_batch_overfill():
+    ring = WindowRing(4, 2, 8)
+    mean = np.arange(12, dtype=np.float32).reshape(6, 2)
+    ring.push_batch(mean, mean, np.arange(6, dtype=np.int32))
+    assert ring.total == 6 and len(ring) == 4
+    m, _, lab = ring.ordered()
+    np.testing.assert_array_equal(lab, [2, 3, 4, 5])
+    np.testing.assert_array_equal(m, mean[2:])
+    np.testing.assert_array_equal(ring.last_labels(3), np.array([3, 4, 5]))
+    with pytest.raises(ValueError):
+        ring.last_labels(6)
+
+
+def test_window_series_copy_survives_wraparound():
+    samples = _stream(seed=23)
+    mon = KermitMonitor(window_size=WINDOW, retention=8)
+    ctxs = mon.ingest_array(samples[:6 * WINDOW])
+    held = mon.window_series(copy=True)
+    before = held.mean.copy()
+    mon.ingest_array(samples[6 * WINDOW:])        # wraps the ring
+    np.testing.assert_array_equal(held.mean, before)
+
+
+def test_window_ring_last_labels_padding():
+    ring = WindowRing(8, 2, 4)
+    ring.push(np.zeros(2), np.zeros(2), 3)
+    np.testing.assert_array_equal(ring.last_labels(4), [-1, -1, -1, 3])
+
+
+# -- JSONL context persistence -------------------------------------------------
+
+
+def test_jsonl_output_equivalent_to_seed(tmp_path, artifacts):
+    clf, pred = artifacts
+    samples = _stream(seed=12)
+
+    def lines(root, fast):
+        with KermitMonitor(window_size=WINDOW, classifier=clf,
+                           predictor=pred, root=root, fast=fast) as mon:
+            if fast:
+                mon.ingest_array(samples)
+            else:
+                for s in samples:
+                    mon.ingest(s)
+        out = []
+        for ln in (root / "tz" / "context.jsonl").read_text().splitlines():
+            d = json.loads(ln)
+            d.pop("timestamp")
+            out.append(d)
+        return out
+
+    fast = lines(tmp_path / "fast", True)
+    seed = lines(tmp_path / "seed", False)
+    assert fast == seed
+    # predicted keys survive the JSON round trip as strings of the horizons
+    assert set(fast[0]["predicted"]) == {"1", "5", "10"}
+
+
+def test_jsonl_writes_are_buffered(tmp_path):
+    samples = _stream(seed=13)
+    f = tmp_path / "tz" / "context.jsonl"
+    mon = KermitMonitor(window_size=WINDOW, root=tmp_path,
+                        ctx_flush_every=10 ** 6)
+    mon.ingest_array(samples)
+    assert not f.exists() or f.read_text() == ""   # nothing flushed yet
+    mon.flush()
+    n_lines = len(f.read_text().splitlines())
+    assert n_lines == len(samples) // WINDOW
+    mon.close()
+    assert mon._ctx_file is None
+    mon.close()                                    # idempotent
+
+
+def test_jsonl_interval_flush(tmp_path):
+    samples = _stream(seed=14)
+    n_win = len(samples) // WINDOW
+    mon = KermitMonitor(window_size=WINDOW, root=tmp_path, ctx_flush_every=4)
+    mon.ingest_array(samples)
+    f = tmp_path / "tz" / "context.jsonl"
+    flushed = len(f.read_text().splitlines())
+    assert flushed == (n_win // 4) * 4             # only full intervals
+    mon.close()
+    assert len(f.read_text().splitlines()) == n_win
+
+
+def test_pinned_context_ignores_staleness(tmp_path):
+    # batch processing reaches contexts long after ingestion: a pinned ctx
+    # must not trip the monitor-desync staleness fallback
+    from repro.core.explorer import Explorer
+    from repro.core.knowledge import WorkloadDB
+    from repro.core.monitor import WorkloadContext
+    from repro.core.plugin import KermitPlugin
+    db = WorkloadDB(tmp_path)
+    label = db.insert({"mean": np.zeros(4), "std": np.ones(4), "n": 16})
+    plug = KermitPlugin(db, KermitMonitor(window_size=4),
+                        Explorer({"microbatches": [1, 2, 4]}),
+                        max_staleness_s=0.0)
+    old = WorkloadContext(window_id=0, timestamp=0.0, current_label=label,
+                          predicted={}, in_transition=False)
+    tun = plug.on_resource_request(lambda t: abs(t.microbatches - 4), ctx=old)
+    assert tun.microbatches == 4
+    assert plug.stats.stale_contexts == 0
+
+
+# -- AutonomicManager: bounded events + step_batch -----------------------------
+
+
+def test_manager_events_bounded():
+    from repro.configs.base import DEFAULT_TUNABLES
+    from repro.core.autonomic import AutonomicEvent, AutonomicManager
+    mgr = AutonomicManager(window_size=4, max_events=5)
+    for i in range(20):
+        mgr._record(AutonomicEvent(i, "transition", UNKNOWN))
+    assert len(mgr.events) == 5
+    assert mgr.events_total == 20
+    assert mgr.summary()["events"] == 20
+    assert mgr.summary()["events_retained"] == 5
+    assert mgr.current == DEFAULT_TUNABLES
+
+
+def test_step_batch_matches_per_sample_step(tmp_path):
+    from repro.core.autonomic import AutonomicManager
+    from repro.core.explorer import Explorer
+
+    sim = generate([("dense_train", 8), ("decode_serve", 8),
+                    ("dense_train", 8)], window_size=8, seed=15)
+
+    def objective(t):
+        return abs(t.microbatches - 2)
+
+    def build(root):
+        return AutonomicManager(root=root, window_size=8,
+                                analysis_interval=10, dbscan_eps=0.35,
+                                explorer=Explorer({"microbatches": [1, 2, 4]}))
+
+    with build(tmp_path / "a") as a:
+        for s in sim.samples:
+            a.step(s, objective)
+    with build(tmp_path / "b") as b:
+        b.step_batch(sim.samples, objective)
+
+    key = lambda m: [(e.window_id, e.kind, e.label) for e in m.events]
+    assert key(a) == key(b)
+    assert a.current == b.current
+    assert a.summary()["windows"] == b.summary()["windows"]
+    assert a.events_total == b.events_total
