@@ -7,9 +7,13 @@ predictor attached — the steady state of a managed loop — in both modes:
 
 * ``fast``  — the fused batched pipeline (this repo's default): one compiled
               device program per ingested window batch, ring-buffer state.
-* ``seed``  — the original per-sample path behind ``fast=False``: three
-              separate host round-trips (change-detect, classify, predict)
-              per window, per-sample Python ingest loop.
+              Selected by ``KermitConfig(impl="auto")``.
+* ``seed``  — the original per-sample path: three separate host round-trips
+              (change-detect, classify, predict) per window, per-sample
+              Python ingest loop.  Selected by ``KermitConfig(impl="legacy")``.
+
+Both monitors are built through the ``repro.kermit`` config tree — the
+unified ``impl`` policy replaced the old scattered ``fast=...`` flags.
 
 The parity gate has teeth: the two paths must emit bit-equal labels,
 transition flags and predicted-label dicts on the same stream, so the
@@ -51,12 +55,16 @@ def _stream(n_windows: int, seed: int = 1):
 
 
 def _run(samples, clf, pred, fast: bool):
-    from repro.core.monitor import KermitMonitor
-    mon = KermitMonitor(window_size=WINDOW, classifier=clf, predictor=pred,
-                        fast=fast)
+    from repro.kermit import KermitConfig, KermitSession, MonitorConfig
+    sess = KermitSession(KermitConfig(
+        monitor=MonitorConfig(window_size=WINDOW),
+        impl="auto" if fast else "legacy"))
+    mon = sess.monitor
+    mon.classifier, mon.predictor = clf, pred
     t0 = time.perf_counter()
     ctxs = mon.ingest_array(samples)
     dt = time.perf_counter() - t0
+    sess.close()
     return dt, ctxs
 
 

@@ -21,8 +21,9 @@ import time
 
 from repro.configs.base import DEFAULT_TUNABLES, ShapeSpec, Tunables, reduced
 from repro.configs.registry import get_config
-from repro.core.autonomic import AutonomicManager
 from repro.core.explorer import Explorer
+from repro.kermit import (AnalysisConfig, KermitConfig, KermitSession,
+                          KnowledgeConfig, MonitorConfig, PlanConfig)
 from repro.optim.adamw import OptConfig
 from repro.runtime.loop import Trainer
 
@@ -41,17 +42,18 @@ PHASES = [
 
 def run_schedule(n_phases, steps, mode, root=None):
     oc = OptConfig(lr=1e-3, warmup=5)
-    manager = AutonomicManager(root=root, window_size=4,
-                               analysis_interval=5,
-                               explorer=Explorer(LIVE_SPACE),
-                               dbscan_eps=0.25) if mode == "kermit" else None
+    session = KermitSession(KermitConfig(
+        monitor=MonitorConfig(window_size=4),
+        analysis=AnalysisConfig(interval=5, dbscan_eps=0.25),
+        plan=PlanConfig(space=LIVE_SPACE),
+        knowledge=KnowledgeConfig(root=root))) if mode == "kermit" else None
     total_t, per_phase = 0.0, []
     oracle_cache = {}
     for i in range(n_phases):
         arch, shape = PHASES[i % len(PHASES)]
         cfg = reduced(get_config(arch)).replace(n_layers=2, vocab=256)
         tun = DEFAULT_TUNABLES
-        tr = Trainer(cfg, shape, oc, tun, autonomic=manager, seed=i)
+        tr = Trainer(cfg, shape, oc, tun, autonomic=session, seed=i)
         if mode == "oracle":
             key = arch
             if key not in oracle_cache:
@@ -66,8 +68,9 @@ def run_schedule(n_phases, steps, mode, root=None):
         total_t += dt
         per_phase.append(round(dt, 2))
     out = {"mode": mode, "total_s": round(total_t, 2), "phase_s": per_phase}
-    if manager:
-        out["kermit"] = manager.summary()
+    if session:
+        out["kermit"] = session.summary()
+        session.close()
     return out
 
 

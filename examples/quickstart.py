@@ -1,24 +1,50 @@
-"""Quickstart: train a reduced-config assigned architecture for a few steps
-on CPU, with checkpointing and telemetry, using the public API.
+"""Quickstart: the whole KERMIT MAPE-K loop in a few lines.
 
-  PYTHONPATH=src python examples/quickstart.py [arch]
+One declarative config tree, one session, one pluggable Execute phase.  The
+SimulatorExecutor renders a ground-truth workload schedule (the paper's
+HiBench analogue) and prices configurations with a synthetic cost model, so
+the full cycle — monitor, discover classes, search once per class, retune,
+reuse — runs on any CPU in under a minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+To manage a real training loop instead, pass the session to
+``repro.runtime.loop.Trainer(..., autonomic=session)`` — the Trainer binds a
+measured-step CallableExecutor automatically (see examples/autonomic_train.py).
 """
-import sys
+from repro.kermit import (AnalysisConfig, EventKind, KermitConfig,
+                          KermitSession, MonitorConfig, PlanConfig,
+                          SimulatorExecutor)
 
-from repro.configs.base import DEFAULT_TUNABLES, ShapeSpec, reduced
-from repro.configs.registry import get_config
-from repro.optim.adamw import OptConfig
-from repro.runtime.loop import Trainer
+config = KermitConfig(
+    monitor=MonitorConfig(window_size=16),
+    analysis=AnalysisConfig(interval=8, dbscan_eps=0.3),
+    plan=PlanConfig(space={"microbatches": [1, 2, 4],
+                           "remat": ["dots", "none"]}),
+)
+assert KermitConfig.from_dict(config.to_dict()) == config  # JSON-spec ready
 
-arch = sys.argv[1] if len(sys.argv) > 1 else "internlm2-1.8b"
-cfg = reduced(get_config(arch))
-shape = ShapeSpec("quickstart", seq_len=128, global_batch=4, kind="train")
+# a repeating schedule of two workload classes, rendered to telemetry
+executor = SimulatorExecutor([("dense_train", 12), ("decode_serve", 12),
+                              ("dense_train", 8)], window_size=16, seed=0)
 
-trainer = Trainer(cfg, shape, OptConfig(lr=1e-3, warmup=5), DEFAULT_TUNABLES)
-report = trainer.run(steps=15)
+retunes = []
+with KermitSession(config, executor=executor) as session:
+    session.subscribe(EventKind.RETUNE, retunes.append)
+    tunables = session.run()            # drive the loop over the stream
+    summary = session.summary()
 
-print(f"arch={arch} ({cfg.family})")
-print(f"loss: {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
-print(f"mean step time: {sum(report.step_times)/len(report.step_times):.3f}s")
-assert report.losses[-1] < report.losses[0], "training should reduce loss"
+print(f"windows monitored:   {summary['windows']}")
+print(f"workloads discovered: {summary['known_workloads']} "
+      f"(+{summary['anticipated_hybrids']} ZSL hybrids)")
+print(f"plugin: {summary['plugin']}")
+print("retune events: " + str([(e.window_id, e.tunables["microbatches"],
+                                e.tunables["remat"]) for e in retunes]))
+print(f"final tunables: microbatches={tunables.microbatches} "
+      f"remat={tunables.remat}")
+
+assert summary["known_workloads"] >= 2, "discovery should find both classes"
+assert retunes, "the plan phase should have retuned at least once"
+assert (tunables.microbatches, tunables.remat) == (2, "none"), \
+    "search should land on the simulator cost model's optimum"
 print("OK")

@@ -5,6 +5,10 @@ On-line:  monitor (KWmon), change_detector, plugin (KPlg, Algorithm 1),
 Off-line: analyser (KWanl, Algorithm 2 + training pipeline), dbscan,
           characterize, forest, synthesizer (ZSL).
 Knowledge: knowledge (WorkloadDB). Substrate: windows, simulator.
+
+These are the loop's components; programs should drive them through the
+``repro.kermit`` facade (KermitSession + KermitConfig + Executor).  The
+``AutonomicManager`` exported here is the deprecated pre-facade shim.
 """
 from repro.core.windows import FEATURES, NUM_FEATURES, WindowSeries, make_windows
 from repro.core.change_detector import ChangeDetector, welch_t

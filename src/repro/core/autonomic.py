@@ -1,47 +1,36 @@
-"""AutonomicManager — the assembled MAPE-K loop (paper Fig. 3).
+"""AutonomicManager — deprecated shim over ``repro.kermit.KermitSession``.
 
-Monitor:  KermitMonitor ingests step telemetry (KAgnt/KPlg streams).
-Analyze:  ChangeDetector on-line; KermitAnalyser (KWanl) batch discovery +
-          classifier training every ``analysis_interval`` windows.
-Plan:     KermitPlugin (Algorithm 1) decides reuse / local / global search.
-Execute:  the caller applies the returned Tunables (re-jit of the step).
-Knowledge: WorkloadDB persists across runs — labels are never deleted.
+The assembled MAPE-K loop now lives behind the declarative config tree and
+the first-class Execute phase in :mod:`repro.kermit`; this module keeps the
+historical kwarg surface working (with a ``DeprecationWarning``) and emits
+bit-identical event streams by delegating every decision to an embedded
+session.  See docs/api.md for the old-kwarg -> config-field mapping.
 
-The manager is deliberately framework-facing: ``step(telemetry_sample,
-objective)`` is the only thing a training/serving loop must call;
-``step_batch`` feeds a whole telemetry batch through the monitor's fused
-fast path while preserving per-window semantics (analysis cadence, retunes).
-Event and context state is bounded (``max_events`` / ``monitor_retention``)
-so long-running managed loops hold constant memory.
+    # before                                   # now
+    mgr = AutonomicManager(window_size=16)     cfg = KermitConfig(
+    mgr.step(sample, objective)                    monitor=MonitorConfig(window_size=16))
+                                               sess = KermitSession(cfg,
+                                                   executor=CallableExecutor(objective))
+                                               sess.step(sample)
 """
 from __future__ import annotations
 
-from collections import deque
-from dataclasses import dataclass, field
+import warnings
 from pathlib import Path
 from typing import Callable, Optional
 
-import numpy as np
-
 from repro.configs.base import DEFAULT_TUNABLES, Tunables
-from repro.core.analyser import KermitAnalyser
 from repro.core.change_detector import ChangeDetector
 from repro.core.explorer import Explorer
-from repro.core.knowledge import WorkloadDB
-from repro.core.monitor import KermitMonitor, WorkloadContext
-from repro.core.plugin import KermitPlugin
-
-
-@dataclass
-class AutonomicEvent:
-    window_id: int
-    kind: str            # "transition" | "analysis" | "retune" | "steady"
-    label: int
-    tunables: Optional[dict] = None
-    detail: dict = field(default_factory=dict)
+from repro.kermit.config import (AnalysisConfig, KermitConfig,
+                                 KnowledgeConfig, MonitorConfig, PlanConfig)
+from repro.kermit.events import AutonomicEvent  # noqa: F401  (compat re-export)
+from repro.kermit.executor import CallableExecutor
 
 
 class AutonomicManager:
+    """Deprecated: use :class:`repro.kermit.KermitSession`."""
+
     def __init__(self, *, root: str | Path | None = None,
                  window_size: int = 16,
                  analysis_interval: int = 24,
@@ -55,100 +44,101 @@ class AutonomicManager:
                  fast_monitor: bool = True,
                  monitor_retention: int = 4096,
                  max_events: int = 4096):
-        self.db = WorkloadDB(root, drift_eps=drift_eps)
-        det = detector or ChangeDetector()
-        self.monitor = KermitMonitor(window_size=window_size, detector=det,
-                                     root=root, fast=fast_monitor,
-                                     retention=monitor_retention,
-                                     ctx_retention=monitor_retention)
-        self.analyser = KermitAnalyser(self.db, detector=det,
-                                       dbscan_eps=dbscan_eps,
-                                       dbscan_impl=dbscan_impl,
-                                       fast=fast_analysis)
-        self.plugin = KermitPlugin(self.db, self.monitor,
-                                   explorer or Explorer(), default)
-        self.analysis_interval = analysis_interval
-        self.current = default
-        self._last_label = None
-        self._since_analysis = 0
-        self.events: deque[AutonomicEvent] = deque(maxlen=max_events)
-        self.events_total = 0
-        self._last_analysis_seconds: Optional[float] = None
+        # deferred: kermit.session imports core submodules, so a top-level
+        # import here would cycle through the repro.core package init
+        from repro.kermit.session import KermitSession
+        warnings.warn(
+            "AutonomicManager is deprecated; build a KermitSession from a "
+            "KermitConfig tree instead (see docs/api.md for the kwarg "
+            "mapping)", DeprecationWarning, stacklevel=2)
+        cfg = KermitConfig(
+            monitor=MonitorConfig(window_size=window_size,
+                                  retention=monitor_retention,
+                                  ctx_retention=monitor_retention),
+            analysis=AnalysisConfig(interval=analysis_interval,
+                                    dbscan_eps=dbscan_eps),
+            knowledge=KnowledgeConfig(root=str(root) if root else None,
+                                      drift_eps=drift_eps),
+            plan=PlanConfig(default_tunables=default.as_dict()
+                            if default != DEFAULT_TUNABLES else None),
+            max_events=max_events)
+        self.session = KermitSession(cfg, detector=detector,
+                                     explorer=explorer)
+        # the unified impl policy is uniform by design; legacy mixed flags
+        # (fast monitor + seed analysis, a pinned dbscan backend, ...) are
+        # honoured by overriding the built components directly
+        self.session.monitor.fast = fast_monitor
+        self.session.analyser.fast = fast_analysis
+        self.session.analyser.dbscan_impl = dbscan_impl if fast_analysis \
+            else "legacy"
 
     # -- the single integration point -----------------------------------------
 
     def step(self, sample, objective: Callable[[Tunables], float]
              ) -> Tunables:
-        """Feed one telemetry sample; returns the Tunables the managed system
-        should run with (changes only at window boundaries)."""
-        ctx = self.monitor.ingest(sample)
-        if ctx is None:
-            return self.current
-        return self._on_context(ctx, objective)
+        """Feed one telemetry sample; the threaded ``objective`` is wrapped
+        into a CallableExecutor (the Execute phase the session owns now)."""
+        self._bind(objective)
+        return self.session.step(sample)
 
     def step_batch(self, samples, objective: Callable[[Tunables], float]
                    ) -> Tunables:
-        """Feed a whole (N, F) telemetry batch.  Ingestion is chunked at
-        analysis boundaries so classifier/predictor refreshes land exactly
-        where a per-sample ``step`` loop would have placed them; within each
-        chunk the monitor's fused fast path runs one device dispatch."""
-        samples = np.asarray(samples, np.float32)
-        W = self.monitor.window_size
-        i = 0
-        while i < len(samples):
-            win_left = max(self.analysis_interval - self._since_analysis, 1)
-            need = max(win_left * W - self.monitor.pending_samples, 1)
-            chunk = samples[i:i + need]
-            i += len(chunk)
-            for ctx in self.monitor.ingest_array(chunk):
-                self._on_context(ctx, objective)
-        return self.current
+        self._bind(objective)
+        return self.session.step_batch(samples)
 
-    # -- per-window analyze/plan/execute ---------------------------------------
+    def _bind(self, objective) -> None:
+        ex = self.session.executor
+        # == not `is`: per-step bound methods (mgr.step(s, self.objective))
+        # compare equal, so the hot loop keeps one executor and its stats
+        if isinstance(ex, CallableExecutor) and ex._objective == objective:
+            return
+        self.session.bind_executor(CallableExecutor(objective), replace=True)
+
+    # -- delegated state --------------------------------------------------------
+
+    @property
+    def db(self):
+        return self.session.db
+
+    @property
+    def monitor(self):
+        return self.session.monitor
+
+    @property
+    def analyser(self):
+        return self.session.analyser
+
+    @property
+    def plugin(self):
+        return self.session.plugin
+
+    @property
+    def analysis_interval(self) -> int:
+        return self.session.config.analysis.interval
+
+    @property
+    def current(self) -> Tunables:
+        return self.session.current
+
+    @current.setter
+    def current(self, tun: Tunables) -> None:
+        self.session.current = tun
+
+    @property
+    def events(self):
+        return self.session.events
+
+    @property
+    def events_total(self) -> int:
+        return self.session.events_total
 
     def _record(self, ev: AutonomicEvent) -> None:
-        self.events.append(ev)
-        self.events_total += 1
-
-    def _on_context(self, ctx: WorkloadContext,
-                    objective: Callable[[Tunables], float]) -> Tunables:
-        self._since_analysis += 1
-
-        # off-line subsystem cadence (A of MAPE-K)
-        if self._since_analysis >= self.analysis_interval:
-            self._since_analysis = 0
-            ws = self.monitor.window_series()
-            if ws is not None and len(ws) >= 8:
-                rep = self.analyser.run(ws)
-                self.monitor.classifier = self.analyser.classifier
-                self.monitor.predictor = self.analyser.predictor
-                self._last_analysis_seconds = rep.analysis_seconds
-                self._record(AutonomicEvent(
-                    ctx.window_id, "analysis", ctx.current_label,
-                    detail={"clusters": rep.clusters,
-                            "new": rep.new_labels,
-                            "drifted": rep.drifted_labels,
-                            "seconds": rep.analysis_seconds}))
-
-        # plan/execute at workload boundaries (label change or fresh optimum)
-        label = ctx.current_label
-        if ctx.in_transition:
-            self._record(AutonomicEvent(ctx.window_id, "transition", label))
-        if label != self._last_label and not ctx.in_transition:
-            tun = self.plugin.on_resource_request(objective, ctx=ctx)
-            if tun != self.current:
-                self._record(AutonomicEvent(
-                    ctx.window_id, "retune", label,
-                    tunables=tun.as_dict()))
-            self.current = tun
-            self._last_label = label
-        return self.current
+        self.session._record(ev)
 
     # -- lifecycle -------------------------------------------------------------
 
     def close(self) -> None:
-        """Flush + release the monitor's JSONL context stream."""
-        self.monitor.close()
+        self.session.close()
 
     def __enter__(self) -> "AutonomicManager":
         return self
@@ -159,15 +149,4 @@ class AutonomicManager:
     # -- reporting -------------------------------------------------------------
 
     def summary(self) -> dict:
-        s = self.plugin.stats
-        return {
-            "last_analysis_seconds": self._last_analysis_seconds,
-            "windows": self.monitor._window_id,
-            "known_workloads": len([r for r in self.db.records.values()
-                                    if not r.is_synthetic]),
-            "anticipated_hybrids": len([r for r in self.db.records.values()
-                                        if r.is_synthetic]),
-            "plugin": vars(s).copy(),
-            "events": self.events_total,
-            "events_retained": len(self.events),
-        }
+        return self.session.summary()

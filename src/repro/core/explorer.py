@@ -56,6 +56,12 @@ class Explorer:
     def __init__(self, space: dict | None = None, max_passes: int = 3,
                  max_memo: int = 4096):
         self.space = dict(space or DEFAULT_SPACE)
+        # declarative configs (PlanConfig.space, JSON experiment specs) make
+        # knob-name typos easy — fail at construction, not mid-search
+        unknown = [k for k in self.space if not hasattr(DEFAULT_TUNABLES, k)]
+        if unknown:
+            raise ValueError(
+                f"unknown Tunables knob(s) in search space: {unknown}")
         self.max_passes = max_passes
         self.max_memo = max_memo
         self._memo: OrderedDict = OrderedDict()

@@ -128,9 +128,24 @@ class WorkloadDB:
         return sorted(self.records)
 
     # -- persistence (az zone) ----------------------------------------------
+    #
+    # save()/load() are an explicit, symmetric round-trip API: save(path) on
+    # one DB followed by load(path) on another reproduces every record
+    # exactly — including hybrid ``pair`` provenance, which JSON would
+    # otherwise silently degrade from tuple to list on reload.
 
-    def save(self):
+    def _db_path(self, path: str | Path | None) -> Optional[Path]:
+        if path is not None:
+            return Path(path)
         if self.root is None:
+            return None
+        return self.root / "az" / "workloads.json"
+
+    def save(self, path: str | Path | None = None):
+        """Atomically persist all records (to ``root``'s az zone, or an
+        explicit ``path`` for root-less in-memory DBs)."""
+        out_path = self._db_path(path)
+        if out_path is None:
             return
         out = {
             "next_label": self._next_label,
@@ -139,19 +154,27 @@ class WorkloadDB:
                      characterization=_to_jsonable(r.characterization))
                 for r in self.records.values()],
         }
-        path = self.root / "az" / "workloads.json"
-        tmp = path.with_suffix(".tmp")
+        out_path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = out_path.with_suffix(".tmp")
         tmp.write_text(json.dumps(out))
-        tmp.replace(path)
+        tmp.replace(out_path)
 
-    def _load(self):
-        path = self.root / "az" / "workloads.json"
-        if not path.exists():
-            return
-        raw = json.loads(path.read_text())
+    def load(self, path: str | Path | None = None) -> bool:
+        """Replace this DB's records with the saved state at ``path`` (or
+        ``root``'s az zone).  Returns False when nothing exists there.
+        ``pair`` provenance is restored to tuples (JSON stores lists)."""
+        in_path = self._db_path(path)
+        if in_path is None or not in_path.exists():
+            return False
+        raw = json.loads(in_path.read_text())
         self._next_label = raw["next_label"]
+        self.records = {}
         for r in raw["records"]:
             r["characterization"] = _from_jsonable(r["characterization"])
             r["pair"] = tuple(r["pair"]) if r["pair"] else None
             rec = WorkloadRecord(**r)
             self.records[rec.label] = rec
+        return True
+
+    def _load(self):
+        self.load()

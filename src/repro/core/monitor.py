@@ -145,6 +145,12 @@ class KermitMonitor:
         """Raw samples buffered toward the next (incomplete) window."""
         return len(self._buf)
 
+    @property
+    def windows_emitted(self) -> int:
+        """Total observation windows emitted so far — the monitor's
+        window-count clock (plugin staleness, summaries)."""
+        return self._window_id
+
     def _ring_for(self, mean) -> WindowRing:
         """The window ring, created on first use with the stream's feature
         width (the seed list storage accepted any telemetry width, not just

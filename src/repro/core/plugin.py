@@ -8,14 +8,20 @@ bundle). Reads the latest workload context from the monitor stream, then:
   known + drifting             -> Explorer.local_search from last good config
   known + no config            -> Explorer.global_search
 
-and updates WorkloadDB with the result. Context staleness is checked against
-``max_staleness_s``; stale contexts log an error and fall back to default.
+and updates WorkloadDB with the result. Context staleness is measured in
+*windows* — how far the stream has advanced past the context being acted on
+— against ``max_staleness_windows``; stale contexts log an error and fall
+back to default.  The window count comes from an injectable ``clock``
+(defaulting to the monitor's own emitted-window counter), so staleness is
+deterministic in tests and batch replays — the old wall-clock
+``max_staleness_s`` guard is deprecated and ignored.
 """
 from __future__ import annotations
 
 import logging
-import time
+import warnings
 from dataclasses import dataclass
+from typing import Callable, Optional
 
 from repro.configs.base import DEFAULT_TUNABLES, Tunables
 from repro.core.explorer import Explorer
@@ -23,6 +29,8 @@ from repro.core.knowledge import UNKNOWN, WorkloadDB
 from repro.core.monitor import KermitMonitor, WorkloadContext
 
 log = logging.getLogger("kermit.plugin")
+
+_UNSET = object()
 
 
 @dataclass
@@ -40,14 +48,29 @@ class KermitPlugin:
     def __init__(self, db: WorkloadDB, monitor: KermitMonitor,
                  explorer: Explorer | None = None,
                  default: Tunables = DEFAULT_TUNABLES,
-                 max_staleness_s: float = 300.0):
+                 max_staleness_windows: int = 256,
+                 clock: Optional[Callable[[], int]] = None,
+                 max_staleness_s: float = _UNSET):
         self.db = db
         self.monitor = monitor
         self.explorer = explorer or Explorer()
         self.default = default
-        self.max_staleness_s = max_staleness_s
+        self.max_staleness_windows = max_staleness_windows
+        self.clock = clock
+        if max_staleness_s is not _UNSET:
+            warnings.warn(
+                "KermitPlugin(max_staleness_s=...) is deprecated and ignored "
+                "— staleness is now window-count based; use "
+                "max_staleness_windows (PlanConfig.max_staleness_windows)",
+                DeprecationWarning, stacklevel=2)
         self.stats = PluginStats()
         self._memo_label = None     # workload the explorer memo belongs to
+
+    def _window_now(self) -> int:
+        """Current window count: injected clock or the monitor's counter."""
+        if self.clock is not None:
+            return int(self.clock())
+        return self.monitor.windows_emitted
 
     def on_resource_request(self, objective,
                             ctx: WorkloadContext | None = None) -> Tunables:
@@ -65,11 +88,12 @@ class KermitPlugin:
         # latest context; a pinned context is the right one by definition
         # (batch processing may reach it long after ingestion)
         if ctx is None or (not pinned and
-                           (time.time() - ctx.timestamp) >
-                           self.max_staleness_s):
+                           (self._window_now() - 1 - ctx.window_id) >
+                           self.max_staleness_windows):
             if ctx is not None:
-                log.error("workload context stale (%.1fs) — using default; "
-                          "monitor out of sync", time.time() - ctx.timestamp)
+                log.error("workload context stale (%d windows behind) — "
+                          "using default; monitor out of sync",
+                          self._window_now() - 1 - ctx.window_id)
             self.stats.stale_contexts += ctx is not None
             self.stats.default_used += 1
             return self.default

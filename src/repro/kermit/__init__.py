@@ -1,0 +1,43 @@
+"""repro.kermit — the public facade for the KERMIT autonomic architecture.
+
+Everything a program needs to drive the MAPE-K loop:
+
+    from repro.kermit import (KermitConfig, MonitorConfig, AnalysisConfig,
+                              PlanConfig, KnowledgeConfig, ExecConfig,
+                              KermitSession, CallableExecutor,
+                              SimulatorExecutor, EventKind)
+
+    cfg = KermitConfig(monitor=MonitorConfig(window_size=16))
+    with KermitSession(cfg, executor=SimulatorExecutor(schedule)) as s:
+        s.subscribe(EventKind.RETUNE, print)
+        s.run()
+
+This module's ``__all__`` is the API-stability contract, snapshotted by
+``tests/test_public_api.py`` — additions are fine, removals and renames are
+breaking changes and must go through a deprecation cycle (see docs/api.md).
+"""
+from repro.kermit.config import (AnalysisConfig, ExecConfig, IMPL_CHOICES,
+                                 KermitConfig, KnowledgeConfig, MonitorConfig,
+                                 PlanConfig, resolve_impl)
+from repro.kermit.events import EVENT_KINDS, AutonomicEvent, EventKind
+from repro.kermit.executor import (CallableExecutor, Executor,
+                                   SimulatorExecutor)
+from repro.kermit.session import KermitSession
+
+__all__ = [
+    "AnalysisConfig",
+    "AutonomicEvent",
+    "CallableExecutor",
+    "EVENT_KINDS",
+    "EventKind",
+    "ExecConfig",
+    "Executor",
+    "IMPL_CHOICES",
+    "KermitConfig",
+    "KermitSession",
+    "KnowledgeConfig",
+    "MonitorConfig",
+    "PlanConfig",
+    "SimulatorExecutor",
+    "resolve_impl",
+]

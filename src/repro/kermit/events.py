@@ -1,0 +1,35 @@
+"""Typed autonomic events + the subscription surface's vocabulary.
+
+Every decision the loop makes is recorded as an ``AutonomicEvent`` in a
+bounded deque (``KermitSession.events``) and pushed synchronously to any
+subscribers registered via ``KermitSession.subscribe``.  ``kind`` values are
+the ``EventKind`` enum (a str-enum, so ``event.kind == "retune"`` keeps
+working for code that compares against the historical string literals).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Optional
+
+
+class EventKind(str, Enum):
+    TRANSITION = "transition"    # monitor flagged a workload transition window
+    ANALYSIS = "analysis"        # off-line KWanl run (discovery + retraining)
+    RETUNE = "retune"            # plan phase committed a new configuration
+    STEADY = "steady"            # reserved: steady-window heartbeat (not emitted)
+
+    def __str__(self) -> str:    # json.dumps/logging friendliness
+        return self.value
+
+
+EVENT_KINDS = tuple(k.value for k in EventKind)
+
+
+@dataclass
+class AutonomicEvent:
+    window_id: int
+    kind: str                    # an EventKind value
+    label: int
+    tunables: Optional[dict] = None
+    detail: dict = field(default_factory=dict)

@@ -1,0 +1,121 @@
+"""Execute — the E of MAPE-K, as a first-class pluggable boundary.
+
+The paper's KERMIT applies selected configurations to the managed system
+itself; our seed reproduction left that to the caller by threading an
+``objective`` callable through every ``step``.  The ``Executor`` protocol
+makes the boundary explicit and swappable (the generality point stressed by
+the online-tuning literature: Tuneful, arXiv 2001.08002; arXiv 2309.01901):
+
+  apply(tunables)   reconfigure the managed system (re-jit a step, resize
+                    containers, flip a runtime knob, ...)
+  measure()         one measured cost (seconds, $ , J, ...) of the system as
+                    currently configured — lower is better
+
+The Plan phase's Explorer evaluates a candidate as ``apply(c); measure()``;
+when a search commits, the session calls ``apply`` once more with the winner
+so the managed system always ends on the selected configuration.
+
+Ships two implementations:
+
+  CallableExecutor   wraps a legacy ``objective(Tunables) -> float`` (the
+                     bridge for existing measured-step objectives)
+  SimulatorExecutor  drives ``core/simulator.py`` end to end: renders a
+                     schedule's telemetry stream and scores configurations
+                     with a deterministic synthetic cost model — the
+                     self-contained way to run the whole loop on a laptop
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Optional, Protocol, runtime_checkable
+
+from repro.configs.base import DEFAULT_TUNABLES, Tunables
+
+
+@runtime_checkable
+class Executor(Protocol):
+    def apply(self, tunables: Tunables) -> None:
+        """Reconfigure the managed system to run with ``tunables``."""
+        ...
+
+    def measure(self) -> float:
+        """Measured cost of the system as currently configured (lower wins)."""
+        ...
+
+
+class CallableExecutor:
+    """Adapter from the legacy ``objective(Tunables) -> float`` callable.
+
+    ``apply`` stages the configuration; ``measure`` evaluates the wrapped
+    objective at the staged point.  Tracks call counts and cumulative
+    measurement wall time (``measure_seconds``) so benchmarks can report the
+    true search cost without wrapping the objective themselves.
+    """
+
+    def __init__(self, objective: Callable[[Tunables], float],
+                 initial: Tunables = DEFAULT_TUNABLES):
+        self._objective = objective
+        self.current = initial
+        self.applied = 0
+        self.measured = 0
+        self.measure_seconds = 0.0
+
+    def apply(self, tunables: Tunables) -> None:
+        self.current = tunables
+        self.applied += 1
+
+    def measure(self) -> float:
+        t0 = time.perf_counter()
+        cost = float(self._objective(self.current))
+        self.measure_seconds += time.perf_counter() - t0
+        self.measured += 1
+        return cost
+
+
+def _default_sim_cost(t: Tunables) -> float:
+    """Deterministic synthetic step cost with a known optimum
+    (microbatches=2, remat="none", attn_q_chunk=1024) — a smooth bowl the
+    Explorer's hill-climb can descend, for examples and tests."""
+    cost = 1.0
+    cost += 0.05 * abs(math.log2(max(t.microbatches, 1)) - 1.0)
+    cost += 0.0 if t.remat == "none" else 0.1
+    cost += abs(t.attn_q_chunk - 1024) / 8192.0
+    return cost
+
+
+class SimulatorExecutor:
+    """Closed-loop executor over ``core/simulator.py``.
+
+    Renders ``schedule`` (a list of ``(archetype, n_windows)`` segments) into
+    a ground-truth telemetry stream — ``KermitSession.run()`` feeds
+    ``samples`` through the loop — and prices applied configurations with a
+    deterministic ``cost`` model, so the full MAPE-K cycle (discover →
+    search → retune → reuse) runs end to end with no managed system at all.
+    """
+
+    def __init__(self, schedule, *, window_size: int = 32, seed: int = 0,
+                 transition_windows: int = 2, drift: float = 0.0,
+                 cost: Optional[Callable[[Tunables], float]] = None,
+                 initial: Tunables = DEFAULT_TUNABLES):
+        from repro.core.simulator import generate
+        self.result = generate(schedule, window_size=window_size, seed=seed,
+                               transition_windows=transition_windows,
+                               drift=drift)
+        self._cost = cost or _default_sim_cost
+        self.current = initial
+        self.applied = 0
+        self.measured = 0
+
+    @property
+    def samples(self):
+        """The rendered (N, F) telemetry stream."""
+        return self.result.samples
+
+    def apply(self, tunables: Tunables) -> None:
+        self.current = tunables
+        self.applied += 1
+
+    def measure(self) -> float:
+        self.measured += 1
+        return float(self._cost(self.current))

@@ -4,21 +4,46 @@ CPU-friendly default: reduced config + small shape. On a real TPU mesh the
 same entry point takes --full and the production mesh (the step builder,
 sharding rules, checkpointing and the autonomic loop are identical).
 
+The KERMIT loop is driven through ``repro.kermit.KermitSession``; pass
+``--kermit-config spec.json`` to load a full declarative ``KermitConfig``
+tree (``KermitConfig.from_dict`` round-trips ``to_dict`` output), and the
+launcher subscribes to the typed event stream to report per-kind counts.
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 30
   PYTHONPATH=src python -m repro.launch.train --arch mamba2-1.3b --autonomic \
-      --steps 200 --ckpt-dir /tmp/ckpt
+      --steps 200 --ckpt-dir /tmp/ckpt --kermit-config kermit.json
 """
 from __future__ import annotations
 
 import argparse
 import json
+from collections import Counter
 
 from repro.configs.base import DEFAULT_TUNABLES, ShapeSpec, reduced
 from repro.configs.registry import ARCHS, get_config
-from repro.core.autonomic import AutonomicManager
+from repro.kermit import (KermitConfig, KermitSession, KnowledgeConfig,
+                          MonitorConfig)
 from repro.optim.adamw import OptConfig
 from repro.runtime.fault import FailureInjector
 from repro.runtime.loop import Trainer
+
+
+def _build_session(args) -> KermitSession:
+    if args.kermit_config:
+        with open(args.kermit_config) as f:
+            cfg = KermitConfig.from_dict(json.load(f))
+        if args.kermit_root:            # CLI root overrides the spec's
+            cfg = cfg.replace(
+                knowledge=KnowledgeConfig(root=args.kermit_root,
+                                          drift_eps=cfg.knowledge.drift_eps))
+    else:
+        # preserve the historical CLI cadence (the old AutonomicManager
+        # defaults: window 16 vs MonitorConfig's 32) so short --autonomic
+        # runs keep reaching the analysis threshold where they used to
+        cfg = KermitConfig(
+            monitor=MonitorConfig(window_size=16),
+            knowledge=KnowledgeConfig(root=args.kermit_root))
+    return KermitSession(cfg)
 
 
 def main(argv=None):
@@ -34,6 +59,8 @@ def main(argv=None):
                     help="enable the KERMIT MAPE-K loop")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--kermit-root", default=None)
+    ap.add_argument("--kermit-config", default=None,
+                    help="JSON KermitConfig tree (see KermitConfig.to_dict)")
     ap.add_argument("--fail-at", type=int, nargs="*", default=[],
                     help="inject node failures at these steps")
     ap.add_argument("--tun", nargs="*", default=[], help="tunable k=v")
@@ -51,12 +78,14 @@ def main(argv=None):
             type(cur)(v)
         tun = tun.replace(**{k: v})
 
-    autonomic = AutonomicManager(root=args.kermit_root) if args.autonomic \
-        else None
+    session = _build_session(args) if args.autonomic else None
+    event_counts: Counter = Counter()
+    if session is not None:
+        session.subscribe(None, lambda ev: event_counts.update([ev.kind]))
     injector = FailureInjector(fail_steps=tuple(args.fail_at)) \
         if args.fail_at else None
     tr = Trainer(cfg, shape, OptConfig(lr=args.lr, warmup=10), tun,
-                 ckpt_dir=args.ckpt_dir, autonomic=autonomic,
+                 ckpt_dir=args.ckpt_dir, autonomic=session,
                  injector=injector)
     rep = tr.run(args.steps)
     out = {
@@ -67,8 +96,10 @@ def main(argv=None):
         "straggler_events": rep.straggler_events,
         "retunes": rep.retunes,
     }
-    if autonomic:
-        out["kermit"] = autonomic.summary()
+    if session is not None:
+        out["kermit"] = session.summary()
+        out["kermit_events"] = dict(event_counts)
+        session.close()
     print(json.dumps(out, indent=1, default=str))
 
 

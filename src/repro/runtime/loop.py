@@ -3,6 +3,12 @@ jitted step, checkpoint/restart, failure injection + replay recovery,
 straggler detection, telemetry, and the KERMIT autonomic hook (MAPE-K
 Execute = re-jit with the tunables the plug-in selects).
 
+The autonomic integration runs through :class:`repro.kermit.KermitSession`:
+the Trainer binds a measured-step ``CallableExecutor`` (Execute phase) if the
+session has none, subscribes to the typed event stream instead of polling
+``events``, and calls ``session.step(sample)`` — no objective threading.  A
+legacy ``AutonomicManager`` is still accepted and unwrapped to its session.
+
 Runs reduced configs on CPU end-to-end; the same loop drives TPU meshes (the
 step builder and sharding rules are mesh-agnostic).
 """
@@ -11,7 +17,7 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import numpy as np
@@ -19,6 +25,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, ShapeSpec, Tunables, DEFAULT_TUNABLES
 from repro.core.autonomic import AutonomicManager
 from repro.data.pipeline import TokenPipeline
+from repro.kermit import CallableExecutor, EventKind, KermitSession
 from repro.models import model as M
 from repro.optim.adamw import OptConfig
 from repro.runtime.checkpoint import CheckpointManager
@@ -37,6 +44,7 @@ class RunReport:
     failures_recovered: int = 0
     straggler_events: int = 0
     retunes: list = field(default_factory=list)
+    analysis_events: int = 0
     final_tunables: Optional[dict] = None
 
 
@@ -46,14 +54,18 @@ class Trainer:
                  tun: Tunables = DEFAULT_TUNABLES, *,
                  mesh=None, ckpt_dir: str | Path | None = None,
                  ckpt_every: int = 20,
-                 autonomic: Optional[AutonomicManager] = None,
+                 autonomic: Optional[Union[KermitSession,
+                                           AutonomicManager]] = None,
                  injector: Optional[FailureInjector] = None,
                  seed: int = 0):
         self.cfg, self.shape, self.oc = cfg, shape, oc
         self.tun = tun
         self.mesh = mesh
         rules.set_mesh(mesh)
-        self.autonomic = autonomic
+        # accept the new session or the deprecated manager shim; all loop
+        # logic below runs on the session API
+        self.autonomic = autonomic.session \
+            if isinstance(autonomic, AutonomicManager) else autonomic
         self.injector = injector
         self.straggler = StragglerDetector()
         self.ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
@@ -71,7 +83,8 @@ class Trainer:
             seq_len=shape.seq_len, global_batch=shape.global_batch,
             model_flops_per_step=6.0 * n_active * shape.seq_len *
             shape.global_batch,
-            root=autonomic.db.root if autonomic and autonomic.db.root else None)
+            root=self.autonomic.db.root
+            if self.autonomic and self.autonomic.db.root else None)
 
     def _rebuild(self):
         fn = make_train_step(self.cfg, self.oc, self.tun)
@@ -124,7 +137,31 @@ class Trainer:
 
     def run(self, steps: int) -> RunReport:
         rep = RunReport()
-        objective = self.measured_objective() if self.autonomic else None
+        unsubscribe = None
+        if self.autonomic is not None:
+            # Execute phase: measured trial steps of THIS trainer.  Rebind
+            # when unset or owned by a previous Trainer run (schedules reuse
+            # one session across phases with different model shapes).
+            ex = self.autonomic.executor
+            if ex is None or getattr(ex, "_trainer_owned", False):
+                ex = CallableExecutor(self.measured_objective(
+                    self.autonomic.config.execute.measure_repeats))
+                ex._trainer_owned = True
+                self.autonomic.bind_executor(ex, replace=True)
+            # event subscription instead of polling session.events
+            def _on_analysis(ev, _rep=rep):
+                _rep.analysis_events += 1
+            unsubscribe = self.autonomic.subscribe(EventKind.ANALYSIS,
+                                                   _on_analysis)
+        try:
+            return self._run_loop(steps, rep)
+        finally:
+            # sessions outlive Trainers (multi-phase schedules): the handler
+            # must not leak into later phases even on an aborted run
+            if unsubscribe is not None:
+                unsubscribe()
+
+    def _run_loop(self, steps: int, rep: RunReport) -> RunReport:
         # progress-based: failures + replays still land exactly on ``steps``
         while self.step_num < steps:
             try:
@@ -150,7 +187,7 @@ class Trainer:
                     host_wait=self.pipeline.host_wait_s))
 
                 if self.autonomic is not None:
-                    new_tun = self.autonomic.step(sample, objective)
+                    new_tun = self.autonomic.step(sample)
                     if new_tun != self.tun:
                         if "ef" not in self.state:
                             new_tun = new_tun.replace(grad_compression=False)

@@ -242,6 +242,7 @@ def test_plugin_clears_memo_on_label_change(tmp_path):
 
     class Ctx:                       # minimal stand-in for WorkloadContext
         def __init__(self, label):
+            self.window_id = mon.windows_emitted   # fresh w.r.t. staleness
             self.timestamp = _time.time()
             self.current_label = label
 

@@ -1,0 +1,251 @@
+"""KermitSession facade: config-tree round-trip, event subscription, the
+Execute phase, legacy-shim parity, window-count staleness, knowledge
+persistence (ISSUE 3 acceptance criteria)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.base import DEFAULT_TUNABLES, Tunables
+from repro.core.explorer import Explorer
+from repro.core.monitor import KermitMonitor, WorkloadContext
+from repro.core.plugin import KermitPlugin
+from repro.core.simulator import generate
+from repro.kermit import (AnalysisConfig, AutonomicEvent, CallableExecutor,
+                          EventKind, ExecConfig, KermitConfig, KermitSession,
+                          KnowledgeConfig, MonitorConfig, PlanConfig,
+                          SimulatorExecutor, resolve_impl)
+
+SPACE = {"microbatches": [1, 2, 4], "remat": ["dots", "none"]}
+
+
+def _objective(t: Tunables) -> float:
+    return abs(t.microbatches - 2) + (0.0 if t.remat == "none" else 0.5)
+
+
+def _cfg(**kw):
+    base = dict(monitor=MonitorConfig(window_size=8),
+                analysis=AnalysisConfig(interval=10, dbscan_eps=0.35),
+                plan=PlanConfig(space=SPACE))
+    base.update(kw)
+    return KermitConfig(**base)
+
+
+# -- config tree ---------------------------------------------------------------
+
+
+def test_config_round_trip_default():
+    c = KermitConfig()
+    assert KermitConfig.from_dict(c.to_dict()) == c
+
+
+def test_config_round_trip_customized_through_json():
+    c = KermitConfig(
+        monitor=MonitorConfig(window_size=8, retention=128),
+        analysis=AnalysisConfig(interval=5, dbscan_eps=0.2,
+                                synthesize_hybrids=False),
+        plan=PlanConfig(space=SPACE, max_staleness_windows=7,
+                        default_tunables=DEFAULT_TUNABLES.replace(
+                            microbatches=4).as_dict()),
+        knowledge=KnowledgeConfig(root="/tmp/x", drift_eps=0.5),
+        execute=ExecConfig(apply_on_retune=False, measure_repeats=3),
+        impl="legacy", max_events=99)
+    wire = json.dumps(c.to_dict())                 # a real JSON experiment spec
+    assert KermitConfig.from_dict(json.loads(wire)) == c
+
+
+def test_config_rejects_unknown_keys_and_impls():
+    with pytest.raises(ValueError, match="unknown KermitConfig keys"):
+        KermitConfig.from_dict({"montior": {}})
+    with pytest.raises(ValueError, match="monitor.window_sz"):
+        KermitConfig.from_dict({"monitor": {"window_sz": 4}})
+    with pytest.raises(ValueError, match="impl"):
+        KermitConfig(impl="turbo")
+
+
+def test_impl_policy_resolution():
+    assert resolve_impl("auto") == (True, True, "auto")
+    assert resolve_impl("legacy") == (False, False, "legacy")
+    fm, fa, impl = resolve_impl("pallas_interpret")
+    assert (fm, fa, impl) == (True, True, "pallas_interpret")
+    sess = KermitSession(KermitConfig(impl="legacy"))
+    assert sess.monitor.fast is False and sess.analyser.fast is False
+    assert sess.analyser.dbscan_impl == "legacy"
+
+
+def test_explorer_rejects_space_typos():
+    with pytest.raises(ValueError, match="microbatchez"):
+        Explorer({"microbatchez": [1, 2]})
+
+
+# -- event subscription --------------------------------------------------------
+
+
+def test_subscribe_filters_replays_and_unsubscribes():
+    sess = KermitSession(_cfg())
+    for i in range(6):
+        sess._record(AutonomicEvent(i, EventKind.TRANSITION.value, -1))
+    sess._record(AutonomicEvent(6, EventKind.RETUNE.value, 0,
+                                tunables=DEFAULT_TUNABLES.as_dict()))
+
+    got_all, got_ret = [], []
+    # replay catches late-attaching sinks up from the bounded deque
+    sess.subscribe(None, got_all.append, replay=3)
+    assert [e.window_id for e in got_all] == [4, 5, 6]
+    off = sess.subscribe(EventKind.RETUNE, got_ret.append, replay=10)
+    assert [e.window_id for e in got_ret] == [6]
+
+    sess._record(AutonomicEvent(7, EventKind.RETUNE.value, 0))
+    sess._record(AutonomicEvent(8, EventKind.TRANSITION.value, -1))
+    assert [e.window_id for e in got_ret] == [6, 7]      # kind-filtered
+    assert [e.window_id for e in got_all] == [4, 5, 6, 7, 8]
+
+    off()
+    off()                                                # idempotent
+    sess._record(AutonomicEvent(9, EventKind.RETUNE.value, 0))
+    assert [e.window_id for e in got_ret] == [6, 7]
+    assert sess.events_total == 10
+
+
+# -- the closed loop through an Executor ---------------------------------------
+
+
+def test_simulator_executor_closes_the_loop():
+    ex = SimulatorExecutor([("dense_train", 14), ("decode_serve", 14)],
+                           window_size=8, seed=0)
+    retunes = []
+    with KermitSession(_cfg(), executor=ex) as sess:
+        sess.subscribe(EventKind.RETUNE, retunes.append)
+        tun = sess.run()                       # telemetry from the executor
+    assert retunes, "plan phase should commit at least one retune"
+    # the committed winner was applied to the executor (Execute phase)
+    assert ex.current == tun
+    assert (tun.microbatches, tun.remat) == (2, "none")  # sim cost optimum
+    assert ex.applied >= len(retunes) and ex.measured > 0
+
+
+def test_session_without_executor_fails_loudly_on_search():
+    sim = generate([("dense_train", 14)], window_size=8, seed=3)
+    sess = KermitSession(_cfg())
+    with pytest.raises(RuntimeError, match="no Executor bound"):
+        sess.step_batch(sim.samples)
+
+
+def test_bind_executor_guard():
+    sess = KermitSession(_cfg(), executor=CallableExecutor(_objective))
+    with pytest.raises(RuntimeError, match="already has an executor"):
+        sess.bind_executor(CallableExecutor(_objective))
+    sess.bind_executor(CallableExecutor(_objective), replace=True)
+
+
+# -- legacy shim parity (acceptance criterion) ---------------------------------
+
+
+def _event_key(events):
+    # "seconds" is wall time — everything else must be bit-equal
+    return [(e.window_id, e.kind, e.label, e.tunables,
+             {k: v for k, v in e.detail.items() if k != "seconds"})
+            for e in events]
+
+
+def test_manager_shim_warns_and_matches_session_events():
+    sim = generate([("dense_train", 10), ("decode_serve", 10),
+                    ("dense_train", 6)], window_size=8, seed=15)
+
+    with pytest.warns(DeprecationWarning, match="AutonomicManager"):
+        from repro.core.autonomic import AutonomicManager
+        mgr = AutonomicManager(window_size=8, analysis_interval=10,
+                               dbscan_eps=0.35, explorer=Explorer(SPACE))
+    with mgr:
+        for s in sim.samples:
+            mgr.step(s, _objective)
+
+    sess = KermitSession(_cfg(), executor=CallableExecutor(_objective))
+    with sess:
+        sess.step_batch(sim.samples)
+
+    assert _event_key(mgr.events) == _event_key(sess.events)
+    assert any(e.kind == "retune" for e in sess.events)
+    assert mgr.current == sess.current
+    assert mgr.events_total == sess.events_total
+    assert mgr.summary()["windows"] == sess.summary()["windows"]
+
+
+def test_plugin_max_staleness_s_deprecated(tmp_path):
+    from repro.core.knowledge import WorkloadDB
+    with pytest.warns(DeprecationWarning, match="max_staleness_s"):
+        KermitPlugin(WorkloadDB(tmp_path), KermitMonitor(window_size=4),
+                     max_staleness_s=300.0)
+
+
+# -- window-count staleness (deterministic, satellite 1) -----------------------
+
+
+def test_staleness_is_window_count_based_and_deterministic(tmp_path):
+    from repro.core.knowledge import WorkloadDB
+    db = WorkloadDB(tmp_path)
+    label = db.insert({"mean": np.zeros(4), "std": np.ones(4), "n": 16})
+    db.set_config(label, DEFAULT_TUNABLES.as_dict(), optimal=True)
+    mon = KermitMonitor(window_size=4)
+
+    class FakeClf:
+        def predict(self, x):
+            return np.array([label])
+    mon.classifier = FakeClf()
+    mon.ingest_array(generate([("dense_train", 2)], window_size=4,
+                              seed=4).samples)
+
+    # injected window-count clock far ahead -> pulled context is stale
+    plug = KermitPlugin(db, mon, Explorer(SPACE), max_staleness_windows=8,
+                        clock=lambda: mon.windows_emitted + 100)
+    assert plug.on_resource_request(_objective) == plug.default
+    assert plug.stats.stale_contexts == 1
+
+    # same request against the monitor's own counter: fresh, reuses optimum
+    plug2 = KermitPlugin(db, mon, Explorer(SPACE), max_staleness_windows=8)
+    assert plug2.on_resource_request(_objective) == DEFAULT_TUNABLES
+    assert plug2.stats.stale_contexts == 0 and plug2.stats.reused == 1
+
+    # pinned contexts never trip the guard, however old
+    old = WorkloadContext(window_id=0, timestamp=0.0, current_label=label,
+                          predicted={}, in_transition=False)
+    plug3 = KermitPlugin(db, mon, Explorer(SPACE), max_staleness_windows=0,
+                         clock=lambda: 10_000)
+    assert plug3.on_resource_request(_objective, ctx=old) == DEFAULT_TUNABLES
+    assert plug3.stats.stale_contexts == 0
+
+
+# -- knowledge save/load round-trip (satellite 2) ------------------------------
+
+
+def test_workloaddb_explicit_save_load_round_trip(tmp_path):
+    from repro.core.knowledge import WorkloadDB
+    db = WorkloadDB()                                   # root-less, in-memory
+    a = db.insert({"mean": np.ones(3, np.float32), "std": np.ones(3), "n": 8})
+    h = db.insert({"mean": np.zeros(3, np.float32), "std": np.ones(3), "n": 4},
+                  is_synthetic=True, pair=(a, 7))
+    db.set_config(a, DEFAULT_TUNABLES.replace(microbatches=4).as_dict(),
+                  optimal=True)
+    path = tmp_path / "snap.json"
+    db.save(path)
+
+    db2 = WorkloadDB()
+    assert db2.load(path) is True
+    assert db2.labels() == db.labels()
+    assert db2.get(a).config == db.get(a).config
+    # pair provenance survives JSON as a tuple, not a list
+    assert db2.get(h).pair == (a, 7) and isinstance(db2.get(h).pair, tuple)
+    assert db2.new_label() == max(db.labels()) + 1      # counter restored
+    assert db2.load(tmp_path / "missing.json") is False
+
+
+def test_session_save_knowledge_explicit_path(tmp_path):
+    ex = SimulatorExecutor([("dense_train", 14)], window_size=8, seed=0)
+    with KermitSession(_cfg(), executor=ex) as sess:
+        sess.run()
+        path = tmp_path / "kb.json"
+        sess.save_knowledge(path)
+    from repro.core.knowledge import WorkloadDB
+    db = WorkloadDB()
+    assert db.load(path)
+    assert len(db.records) == len(sess.db.records)

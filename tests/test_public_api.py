@@ -1,0 +1,54 @@
+"""Public-API snapshot: ``repro.kermit.__all__`` is the stability contract.
+
+If this test fails you are changing the public facade.  Additions: extend
+the snapshot here and document them in docs/api.md.  Removals/renames are
+breaking changes — deprecate first (see docs/api.md "stability policy").
+"""
+import repro.kermit as kermit
+
+PUBLIC_API = [
+    "AnalysisConfig",
+    "AutonomicEvent",
+    "CallableExecutor",
+    "EVENT_KINDS",
+    "EventKind",
+    "ExecConfig",
+    "Executor",
+    "IMPL_CHOICES",
+    "KermitConfig",
+    "KermitSession",
+    "KnowledgeConfig",
+    "MonitorConfig",
+    "PlanConfig",
+    "SimulatorExecutor",
+    "resolve_impl",
+]
+
+
+def test_public_api_snapshot():
+    assert sorted(kermit.__all__) == PUBLIC_API
+
+
+def test_public_api_importable():
+    for name in PUBLIC_API:
+        assert getattr(kermit, name) is not None
+
+
+def test_session_surface():
+    """The methods examples/docs rely on exist with stable names."""
+    for method in ("step", "step_batch", "run", "subscribe", "bind_executor",
+                   "invalidate", "save_knowledge", "summary", "close",
+                   "__enter__", "__exit__"):
+        assert callable(getattr(kermit.KermitSession, method)), method
+
+
+def test_executor_protocol_shape():
+    class Custom:
+        def apply(self, tunables):
+            pass
+
+        def measure(self):
+            return 0.0
+    assert isinstance(Custom(), kermit.Executor)
+    assert isinstance(kermit.CallableExecutor(lambda t: 0.0), kermit.Executor)
+    assert not isinstance(object(), kermit.Executor)
