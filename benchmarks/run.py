@@ -48,7 +48,7 @@ def main(argv=None) -> None:
         ("zsl[claim83]", bench_zsl),
         ("kernels", bench_kernels),
         ("roofline[deliverable-g]", bench_roofline),
-        ("explorer[claims 30%/92.5%]", bench_explorer),
+        ("plan_explorer[claims 30%/92.5% + batched search]", bench_explorer),
         ("analysis_latency[perf]", bench_analysis_latency),
         ("monitor_throughput[perf]", bench_monitor_throughput),
         ("autonomic_e2e", bench_autonomic_e2e),

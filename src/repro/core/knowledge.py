@@ -120,6 +120,25 @@ class WorkloadDB:
     def get(self, label: int) -> Optional[WorkloadRecord]:
         return self.records.get(label)
 
+    def nearest_config(self, char: dict, *, exclude_label: int | None = None
+                       ) -> Optional[tuple]:
+        """Warm-start lookup: the stored configuration whose workload
+        characterization is nearest (L2 over means) to ``char``.  Unlike
+        ``find_match`` this ranks *synthetic* (ZSL-anticipated) records too —
+        an anticipated hybrid's configuration is exactly what a never-seen
+        workload should start its search from.  Returns
+        ``(config, label, distance)`` or None when no record has a config."""
+        best, best_label, best_d = None, None, np.inf
+        for label, rec in self.records.items():
+            if label == exclude_label or rec.config is None:
+                continue
+            d = l2_drift(rec.characterization, char)
+            if d < best_d:
+                best, best_label, best_d = rec.config, label, d
+        if best is None:
+            return None
+        return dict(best), best_label, float(best_d)
+
     def pure_characterizations(self) -> dict:
         return {l: r.characterization for l, r in self.records.items()
                 if not r.is_synthetic}

@@ -6,7 +6,16 @@ bundle). Reads the latest workload context from the monitor stream, then:
   UNKNOWN label                -> default configuration J^D
   known + has optimal config   -> reuse stored configuration (no search!)
   known + drifting             -> Explorer.local_search from last good config
-  known + no config            -> Explorer.global_search
+  known + no config            -> warm-started search: seed from the nearest
+                                  stored WorkloadDB configuration by
+                                  characterization distance (local refinement
+                                  when statistically close, global from that
+                                  start otherwise) — the paper's reuse story
+                                  applied to search *initialization*, so a
+                                  re-observed or ZSL-anticipated workload
+                                  starts near its optimum; falls back to
+                                  Explorer.global_search from J^D when the
+                                  knowledge base holds no configuration yet
 
 and updates WorkloadDB with the result. Context staleness is measured in
 *windows* — how far the stream has advanced past the context being acted on
@@ -40,6 +49,7 @@ class PluginStats:
     reused: int = 0
     global_searches: int = 0
     local_searches: int = 0
+    warm_starts: int = 0
     stale_contexts: int = 0
     evaluations: int = 0
 
@@ -50,6 +60,7 @@ class KermitPlugin:
                  default: Tunables = DEFAULT_TUNABLES,
                  max_staleness_windows: int = 256,
                  clock: Optional[Callable[[], int]] = None,
+                 warm_start: bool = True,
                  max_staleness_s: float = _UNSET):
         self.db = db
         self.monitor = monitor
@@ -57,6 +68,7 @@ class KermitPlugin:
         self.default = default
         self.max_staleness_windows = max_staleness_windows
         self.clock = clock
+        self.warm_start = warm_start
         if max_staleness_s is not _UNSET:
             warnings.warn(
                 "KermitPlugin(max_staleness_s=...) is deprecated and ignored "
@@ -71,6 +83,30 @@ class KermitPlugin:
         if self.clock is not None:
             return int(self.clock())
         return self.monitor.windows_emitted
+
+    def _snap_to_space(self, config: dict) -> Tunables:
+        """Project a stored configuration onto the Explorer's search space:
+        knobs whose stored value is not among the current candidates snap to
+        the nearest candidate (numeric) or the first one (categorical).
+        Without this, ``local_search`` from an off-grid start (a config
+        stored under a different space) has an empty neighbour ring — it
+        would commit the stale config as optimal after one evaluation and
+        the reuse branch would lock onto it forever."""
+        tun = Tunables(**config)
+        kw = {}
+        for knob, values in self.explorer.space.items():
+            cur = getattr(tun, knob)
+            if cur in values or not values:
+                continue
+            numeric = [v for v in values
+                       if isinstance(v, (int, float))
+                       and not isinstance(v, bool)]
+            if numeric and isinstance(cur, (int, float)) \
+                    and not isinstance(cur, bool):
+                kw[knob] = min(numeric, key=lambda v: abs(v - cur))
+            else:
+                kw[knob] = values[0]
+        return tun.replace(**kw) if kw else tun
 
     def on_resource_request(self, objective,
                             ctx: WorkloadContext | None = None) -> Tunables:
@@ -119,12 +155,34 @@ class KermitPlugin:
         self._memo_label = label
 
         if rec.is_drifting and rec.config is not None:
-            res = self.explorer.local_search(objective,
-                                             Tunables(**rec.config))
+            res = self.explorer.local_search(
+                objective, self._snap_to_space(rec.config))
             self.stats.local_searches += 1
         else:
-            res = self.explorer.global_search(objective, self.default)
-            self.stats.global_searches += 1
+            # warm start: a workload re-observed under a fresh label, or one
+            # a ZSL hybrid anticipated, should not search from scratch —
+            # seed from the nearest stored configuration instead.  The own
+            # label is deliberately NOT excluded: reaching this branch means
+            # rec has no optimal, but a stored non-optimal own config (a
+            # distance-0 match) is the best possible start
+            near = (self.db.nearest_config(rec.characterization)
+                    if self.warm_start else None)
+            if near is not None:
+                warm_cfg, _, dist = near
+                self.stats.warm_starts += 1
+                if dist <= self.db.drift_eps:
+                    # statistically the same workload: its optimum is a
+                    # neighbour away at most — refine locally
+                    res = self.explorer.local_search(
+                        objective, self._snap_to_space(warm_cfg))
+                    self.stats.local_searches += 1
+                else:
+                    res = self.explorer.global_search(
+                        objective, self._snap_to_space(warm_cfg))
+                    self.stats.global_searches += 1
+            else:
+                res = self.explorer.global_search(objective, self.default)
+                self.stats.global_searches += 1
         self.stats.evaluations += res.evaluations
         self.db.set_config(label, res.best.as_dict(), optimal=True)
         self.db.save()

@@ -20,18 +20,20 @@ from repro.kermit.config import (AnalysisConfig, ExecConfig, IMPL_CHOICES,
                                  KermitConfig, KnowledgeConfig, MonitorConfig,
                                  PlanConfig, resolve_impl)
 from repro.kermit.events import EVENT_KINDS, AutonomicEvent, EventKind
-from repro.kermit.executor import (CallableExecutor, Executor,
-                                   SimulatorExecutor)
+from repro.kermit.executor import (BatchExecutor, CallableExecutor, Executor,
+                                   ExecutorObjective, SimulatorExecutor)
 from repro.kermit.session import KermitSession
 
 __all__ = [
     "AnalysisConfig",
     "AutonomicEvent",
+    "BatchExecutor",
     "CallableExecutor",
     "EVENT_KINDS",
     "EventKind",
     "ExecConfig",
     "Executor",
+    "ExecutorObjective",
     "IMPL_CHOICES",
     "KermitConfig",
     "KermitSession",

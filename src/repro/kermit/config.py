@@ -93,6 +93,10 @@ class PlanConfig:
     space: Optional[dict] = None     # knob -> candidates; None -> DEFAULT_SPACE
     max_passes: int = 3              # hill-climb sweeps per global search
     max_memo: int = 4096             # Explorer evaluation-cache bound
+    max_trace: int = 4096            # SearchResult.trace bound (evict oldest)
+    batch_eval: bool = True          # use Executor.measure_batch when offered
+    chunk: int = 512                 # batched exhaustive streaming chunk size
+    warm_start: bool = True          # seed searches from nearest stored config
     max_staleness_windows: int = 256  # pull-path staleness guard (windows)
     default_tunables: Optional[dict] = None  # J^D override; None -> defaults
 

@@ -36,7 +36,7 @@ from repro.core.monitor import KermitMonitor, WorkloadContext
 from repro.core.plugin import KermitPlugin
 from repro.kermit.config import KermitConfig, resolve_impl
 from repro.kermit.events import AutonomicEvent, EventKind
-from repro.kermit.executor import Executor
+from repro.kermit.executor import Executor, ExecutorObjective
 
 
 class KermitSession:
@@ -71,9 +71,10 @@ class KermitSession:
         self.plugin = KermitPlugin(
             self.db, self.monitor,
             explorer or Explorer(pc.space, max_passes=pc.max_passes,
-                                 max_memo=pc.max_memo),
+                                 max_memo=pc.max_memo,
+                                 max_trace=pc.max_trace, chunk=pc.chunk),
             default, max_staleness_windows=pc.max_staleness_windows,
-            clock=cfg.clock)
+            clock=cfg.clock, warm_start=pc.warm_start)
 
         self.executor = executor
         self.current = default
@@ -96,7 +97,10 @@ class KermitSession:
         return self
 
     def _objective(self) -> Callable[[Tunables], float]:
-        """The plan phase's candidate evaluator, bridged onto the executor."""
+        """The plan phase's candidate evaluator, bridged onto the executor.
+        When ``plan.batch_eval`` is set and the executor implements the
+        batched protocol, the bridge exposes ``batch``/``batch_arrays`` so
+        the Explorer evaluates whole candidate sets per dispatch."""
         ex = self.executor
         if ex is None:
             def unbound(_t: Tunables) -> float:
@@ -105,11 +109,7 @@ class KermitSession:
                     "search needs one to evaluate candidates; pass "
                     "executor= at construction or call bind_executor()")
             return unbound
-
-        def objective(t: Tunables) -> float:
-            ex.apply(t)
-            return ex.measure()
-        return objective
+        return ExecutorObjective(ex, batch=self.config.plan.batch_eval)
 
     # -- event subscription ----------------------------------------------------
 

@@ -18,13 +18,15 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
+import math
 import time
 from pathlib import Path
 
 from repro.analysis.roofline import model_flops, roofline_terms, count_params
 from repro.configs.base import DEFAULT_TUNABLES, SHAPES, Tunables
 from repro.configs.registry import ARCHS, get_config, get_shape
-from repro.core.explorer import Explorer
+from repro.core.explorer import DEFAULT_SPACE, Explorer
+from repro.kermit.executor import ExecutorObjective, MeasureCounters
 from repro.launch.dryrun import (OUT_ROOT, lower_cell, probe_cost, _lower,
                                  run_cell)
 from repro.launch.mesh import make_production_mesh
@@ -32,33 +34,106 @@ from repro.models import model as M
 from repro.optim.adamw import OptConfig
 from repro.sharding import rules
 
+import numpy as np
+
 import jax
 
 HBM_BUDGET = 16e9     # v5e per-chip
 
 
 def knob_space(cfg, kind: str) -> dict:
+    """Shape/family-specific overrides layered over the one source of truth,
+    ``core/explorer.DEFAULT_SPACE`` — candidate lists for shared knobs come
+    from there, so the launcher's grid can't silently diverge from the
+    on-line Plan phase's.  ``zero3``/``donate`` are launcher-only knobs."""
     if kind in ("decode",):
         space = {"zero3": [True, False], "donate": [True]}
         if cfg.moe is not None:
-            space["capacity_factor"] = [1.0, 1.25, 2.0]
+            # decode sweeps the capacity extremes, not the fine steps
+            space["capacity_factor"] = [
+                v for v in DEFAULT_SPACE["capacity_factor"] if v != 1.5]
         return space
     space = {
-        "remat": ["dots", "none", "full"],
-        "microbatches": [1, 2, 4, 8],
-        "seq_parallel": [False, True],
+        "remat": list(DEFAULT_SPACE["remat"]),
+        "microbatches": list(DEFAULT_SPACE["microbatches"]),
+        "seq_parallel": list(DEFAULT_SPACE["seq_parallel"]),
         "zero3": [True, False],
     }
     if cfg.attn_free or cfg.family == "hybrid":
-        space["ssm_chunk"] = [128, 256, 512]
+        space["ssm_chunk"] = list(DEFAULT_SPACE["ssm_chunk"])
     else:
-        space["attn_q_chunk"] = [512, 1024, 2048]
+        space["attn_q_chunk"] = list(DEFAULT_SPACE["attn_q_chunk"])
     if cfg.moe is not None:
-        space["capacity_factor"] = [1.0, 1.25, 1.5]
+        # training keeps the sub-2.0 capacity steps (2.0 OOMs the probes)
+        space["capacity_factor"] = [
+            v for v in DEFAULT_SPACE["capacity_factor"] if v <= 1.5]
     if kind == "prefill":
         space.pop("microbatches")
         space.pop("remat")
     return space
+
+
+class RooflineExecutor(MeasureCounters):
+    """Execute boundary for the dry-run hillclimb (the Plan phase's
+    ``BatchExecutor`` protocol over compiled-artifact probes).
+
+    ``measure`` probes one candidate; ``measure_batch`` probes each
+    candidate's raw cost terms (HLO lowering itself cannot be batched) and
+    then reduces ``est = max(compute, memory, collective)`` across the whole
+    batch in one vectorized pass over the stacked term matrix — the Explorer
+    sweeps a knob per dispatch.  Trace rows and progress prints land in
+    evaluation order as each probe completes.  Counter surface is the shared
+    ``MeasureCounters`` shape.
+    """
+
+    def __init__(self, cfg, shape, oc, mesh, chips, mf, trace):
+        self.cfg, self.shape, self.oc, self.mesh = cfg, shape, oc, mesh
+        self.chips, self.mf, self.trace = chips, mf, trace
+        self.current = DEFAULT_TUNABLES
+        self._init_counters()
+
+    def apply(self, tun: Tunables) -> None:
+        self._count_apply(tun)
+
+    def _probe_one(self, tun: Tunables):
+        """Probe one candidate, append its trace row (error or est) in
+        order, and return its term triple (+inf on failure so the commit
+        scan skips it)."""
+        t0 = time.time()
+        try:
+            cost, coll = probe_cost(self.cfg, self.shape, tun, self.oc,
+                                    self.mesh)
+        except Exception as e:
+            self.trace.append({"tun": tun.as_dict(), "error": repr(e)})
+            return (math.inf,) * 3
+        rl = roofline_terms(cost, coll, chips=self.chips,
+                            model_flops=self.mf)
+        est = max(rl.compute_s, rl.memory_s, rl.collective_s)
+        self.trace.append({"tun": tun.as_dict(), "est_s": est,
+                           "compute_s": rl.compute_s,
+                           "memory_s": rl.memory_s,
+                           "collective_s": rl.collective_s,
+                           "bottleneck": rl.bottleneck,
+                           "eval_wall_s": round(time.time() - t0, 1)})
+        print(f"  eval est={est:.3f}s bn={rl.bottleneck} "
+              f"({json.dumps(tun.as_dict())})", flush=True)
+        return (rl.compute_s, rl.memory_s, rl.collective_s)
+
+    def measure(self) -> float:
+        t0 = time.perf_counter()
+        est = float(max(self._probe_one(self.current)))
+        self._count_measure(t0)
+        return est
+
+    def measure_batch(self, candidates) -> list:
+        candidates = list(candidates)
+        t0 = time.perf_counter()
+        # vectorized roofline reduction over the whole knob sweep
+        terms = np.array([self._probe_one(c) for c in candidates],
+                         np.float64).reshape(-1, 3)
+        est = terms.max(axis=1)
+        self._count_measure(t0, len(candidates), batch=True)
+        return [float(e) for e in est]
 
 
 def hillclimb(arch: str, shape_name: str, *, multi_pod=False):
@@ -78,24 +153,8 @@ def hillclimb(arch: str, shape_name: str, *, multi_pod=False):
     mf = model_flops(cfg, shape, n_active)
 
     trace = []
-
-    def objective(tun: Tunables) -> float:
-        t0 = time.time()
-        try:
-            cost, coll = probe_cost(cfg, shape, tun, oc, mesh)
-        except Exception as e:
-            trace.append({"tun": tun.as_dict(), "error": repr(e)})
-            return float("inf")
-        rl = roofline_terms(cost, coll, chips=chips, model_flops=mf)
-        est = max(rl.compute_s, rl.memory_s, rl.collective_s)
-        trace.append({"tun": tun.as_dict(), "est_s": est,
-                      "compute_s": rl.compute_s, "memory_s": rl.memory_s,
-                      "collective_s": rl.collective_s,
-                      "bottleneck": rl.bottleneck,
-                      "eval_wall_s": round(time.time() - t0, 1)})
-        print(f"  eval est={est:.3f}s bn={rl.bottleneck} "
-              f"({json.dumps(tun.as_dict())})", flush=True)
-        return est
+    rex = RooflineExecutor(cfg, shape, oc, mesh, chips, mf, trace)
+    objective = ExecutorObjective(rex)      # batched roofline probe sweeps
 
     ex = Explorer(knob_space(cfg, shape.kind), max_passes=2)
     print(f"[hillclimb] {arch} {shape_name}: baseline eval...", flush=True)

@@ -1,0 +1,352 @@
+"""Plan-phase fast path: batched candidate evaluation, the struct-of-arrays
+codec, and knowledge-warm-started search (see ISSUE/ROADMAP "Plan-phase
+search budget")."""
+import numpy as np
+import pytest
+
+from repro.configs.base import (DEFAULT_TUNABLES, TUNABLE_CATEGORIES,
+                                Tunables, arrays_to_tunables,
+                                encode_tunable_values, tunables_to_arrays)
+from repro.core.explorer import DEFAULT_SPACE, Explorer
+from repro.core.knowledge import WorkloadDB
+from repro.core.monitor import WorkloadContext
+from repro.core.plugin import KermitPlugin
+from repro.kermit import (BatchExecutor, CallableExecutor, ExecutorObjective,
+                          KermitConfig, PlanConfig, SimulatorExecutor)
+
+SPACE = {
+    "remat": ["dots", "none", "full"],
+    "microbatches": [1, 2, 4, 8],
+    "attn_q_chunk": [512, 1024, 2048],
+    "seq_parallel": [False, True],
+    "capacity_factor": [1.0, 1.25, 1.5, 2.0],
+}
+
+
+def _seeded_objective(seed, space=SPACE):
+    rng = np.random.default_rng(seed)
+    # coarse quantization -> exact ties, stressing the first-improving rule
+    w = {k: {v: float(np.round(rng.uniform(0, 1) * 8) / 8) for v in vals}
+         for k, vals in space.items()}
+
+    def objective(t):
+        return sum(w[k][getattr(t, k)] for k in space)
+    return objective
+
+
+# -- the struct-of-arrays codec ---------------------------------------------
+
+
+def test_codec_round_trip_exact():
+    ts = [DEFAULT_TUNABLES,
+          DEFAULT_TUNABLES.replace(remat="full", microbatches=8,
+                                   seq_parallel=True, capacity_factor=2.0,
+                                   accum_dtype="bfloat16", attn_impl="pallas",
+                                   donate=False, prefetch=4)]
+    arrays = tunables_to_arrays(ts)
+    assert all(isinstance(a, np.ndarray) and a.shape == (2,)
+               for a in arrays.values())
+    # categorical knobs really are int-indexed
+    assert arrays["remat"].dtype == np.int32
+    assert arrays["remat"][1] == TUNABLE_CATEGORIES["remat"].index("full")
+    assert arrays_to_tunables(arrays) == ts
+
+
+def test_codec_round_trip_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    pools = {
+        "remat": list(TUNABLE_CATEGORIES["remat"]),
+        "accum_dtype": list(TUNABLE_CATEGORIES["accum_dtype"]),
+        "attn_impl": list(TUNABLE_CATEGORIES["attn_impl"]),
+        "microbatches": [1, 2, 3, 4, 6, 8, 16],
+        "seq_parallel": [False, True],
+        "capacity_factor": [1.0, 1.1, 1.25, 1.5, 1.75, 2.0],
+        "ssm_chunk": [32, 64, 128, 256, 512],
+        "grad_compression": [False, True],
+        "donate": [False, True],
+        "prefetch": [1, 2, 4, 8],
+        "attn_q_chunk": [128, 256, 512, 1024, 2048, 4096],
+        "attn_unroll": [False, True],
+        "layer_unroll": [False, True],
+        "zero3": [False, True],
+    }
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.lists(
+        st.fixed_dictionaries({k: st.sampled_from(v)
+                               for k, v in pools.items()}),
+        min_size=0, max_size=8))
+    def check(dicts):
+        ts = [DEFAULT_TUNABLES.replace(**d) for d in dicts]
+        assert arrays_to_tunables(tunables_to_arrays(ts)) == ts
+    check()
+
+
+def test_codec_rejects_unknowns():
+    with pytest.raises(ValueError, match="unknown"):
+        encode_tunable_values("not_a_knob", [1])
+    with pytest.raises(ValueError, match="vocab"):
+        encode_tunable_values("remat", ["selective"])
+    with pytest.raises(ValueError, match="unknown"):
+        arrays_to_tunables({"not_a_knob": np.array([1])})
+    for bad_idx in (-1, 99):      # no silent Python-list wrap-around
+        with pytest.raises(ValueError, match="out of range"):
+            arrays_to_tunables({"remat": np.array([bad_idx], np.int32)})
+
+
+def test_codec_partial_decode_uses_defaults():
+    out = arrays_to_tunables({"microbatches": np.array([4, 8])})
+    assert [t.microbatches for t in out] == [4, 8]
+    assert all(t.remat == DEFAULT_TUNABLES.remat for t in out)
+
+
+# -- batched vs sequential parity -------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_batched_parity_all_searches(seed):
+    objective = _seeded_objective(seed)
+    rng = np.random.default_rng(seed)
+    start = DEFAULT_TUNABLES.replace(
+        **{k: vals[int(rng.integers(len(vals)))]
+           for k, vals in SPACE.items()})
+    for name, args in (("global_search", (DEFAULT_TUNABLES,)),
+                       ("local_search", (start,)),
+                       ("exhaustive", ())):
+        seq = getattr(Explorer(SPACE), name)(
+            ExecutorObjective(CallableExecutor(objective), batch=False),
+            *args)
+        bat = getattr(Explorer(SPACE), name)(
+            ExecutorObjective(CallableExecutor(objective)), *args)
+        assert seq.best.as_dict() == bat.best.as_dict(), name
+        assert seq.cost == bat.cost, name
+        assert seq.evaluations == bat.evaluations, name
+
+
+def test_plain_callable_objective_still_works():
+    """Objectives without the batched protocol fall back transparently."""
+    objective = _seeded_objective(3)
+    res = Explorer(SPACE).global_search(objective)
+    ref = Explorer(SPACE).global_search(
+        ExecutorObjective(CallableExecutor(objective)))
+    assert res.best.as_dict() == ref.best.as_dict()
+    assert res.cost == ref.cost
+
+
+def test_batched_exhaustive_arrays_matches_sequential():
+    """The struct-of-arrays streaming path (no per-candidate Python objects)
+    commits the same winner and counts every grid point.  Cost parity is
+    EXACT: scalar measure prices through the same vectorized model."""
+    sim = SimulatorExecutor([("dense_train", 4)])
+    seq = Explorer(chunk=256).exhaustive(ExecutorObjective(sim, batch=False))
+    bat = Explorer(chunk=256).exhaustive(ExecutorObjective(sim))
+    grid = int(np.prod([len(v) for v in DEFAULT_SPACE.values()]))
+    assert seq.best.as_dict() == bat.best.as_dict()
+    assert seq.evaluations == bat.evaluations == grid
+    assert bat.cost == seq.cost
+
+
+def test_simulator_scalar_and_batched_cost_are_one_model():
+    """cost_arrays= without cost= must not leave the scalar path on a
+    different model — measure() derives from the vectorized model."""
+    def vec(arrays):
+        return np.asarray(arrays["microbatches"], np.float64) * 2.0
+    sim = SimulatorExecutor([("dense_train", 4)], cost_arrays=vec)
+    sim.apply(DEFAULT_TUNABLES.replace(microbatches=4))
+    assert sim.measure() == 8.0
+    assert sim.measure_batch([DEFAULT_TUNABLES.replace(microbatches=4)]) \
+        == [8.0]
+
+
+def test_callable_executor_batch_objective_exposes_arrays_path():
+    def vec(arrays):
+        return np.asarray(arrays["microbatches"], np.float64) * 2.0
+    cal = CallableExecutor(lambda t: t.microbatches * 2.0,
+                           batch_objective=vec)
+    obj = ExecutorObjective(cal)
+    assert hasattr(obj, "batch_arrays")
+    np.testing.assert_array_equal(
+        obj.batch_arrays({"microbatches": np.array([1, 4], np.int32)}),
+        [2.0, 8.0])
+    # and the Explorer's grid streaming uses it end to end
+    res = Explorer({"microbatches": [1, 2, 4, 8]}).exhaustive(obj)
+    assert res.best.microbatches == 1 and res.cost == 2.0
+    assert cal.measured_batches >= 1
+
+
+def test_batched_dispatch_count_bounded():
+    """A batched grid sweep costs O(grid/chunk) dispatches, not O(grid)."""
+    sim = SimulatorExecutor([("dense_train", 4)])
+    Explorer(chunk=512).exhaustive(ExecutorObjective(sim))
+    grid = int(np.prod([len(v) for v in DEFAULT_SPACE.values()]))
+    assert sim.measured == grid
+    assert sim.measured_batches == -(-grid // 512)
+
+
+# -- exhaustive start= and max_trace ----------------------------------------
+
+
+def test_exhaustive_start_pins_off_space_knobs():
+    objective = _seeded_objective(1)
+    start = DEFAULT_TUNABLES.replace(donate=False, prefetch=4)
+    res = Explorer(SPACE).exhaustive(
+        ExecutorObjective(CallableExecutor(objective)), start)
+    assert res.best.donate is False and res.best.prefetch == 4
+    # default start keeps seed behavior
+    res_d = Explorer(SPACE).exhaustive(
+        ExecutorObjective(CallableExecutor(objective)))
+    assert res_d.best.donate is DEFAULT_TUNABLES.donate
+
+
+def test_max_trace_bounds_trace_not_count():
+    objective = _seeded_objective(2)
+    small = {"microbatches": [1, 2, 4, 8], "prefetch": [1, 2, 4]}
+    grid = 12
+    for batch in (False, True):
+        ex = Explorer(small, max_trace=5)
+        res = ex.exhaustive(
+            ExecutorObjective(CallableExecutor(objective), batch=batch))
+        assert res.evaluations == grid
+        assert len(res.trace) == 5
+        # the evicted entries are the OLDEST: the last trace row is the last
+        # evaluated candidate
+        assert res.trace[-1][0]["microbatches"] == 8
+        assert res.trace[-1][0]["prefetch"] == 4
+
+
+def test_max_trace_validated():
+    with pytest.raises(ValueError):
+        Explorer(SPACE, max_trace=0)
+    with pytest.raises(ValueError):
+        Explorer(SPACE, chunk=0)
+
+
+# -- executor counter surface ------------------------------------------------
+
+
+def test_executor_counter_surface_unified():
+    sim = SimulatorExecutor([("dense_train", 4)])
+    cal = CallableExecutor(lambda t: 1.0)
+    for ex in (sim, cal):
+        assert isinstance(ex, BatchExecutor)
+        ex.apply(DEFAULT_TUNABLES)
+        ex.measure()
+        ex.measure_batch([DEFAULT_TUNABLES,
+                          DEFAULT_TUNABLES.replace(microbatches=2)])
+        assert ex.applied == 1
+        assert ex.measured == 3
+        assert ex.measured_batches == 1
+        assert ex.measure_seconds > 0.0
+
+
+def test_simulator_custom_scalar_cost_has_no_arrays_path():
+    sim = SimulatorExecutor([("dense_train", 4)], cost=lambda t: 1.0)
+    obj = ExecutorObjective(sim)
+    assert hasattr(obj, "batch")              # loops the scalar cost
+    assert not hasattr(obj, "batch_arrays")   # no vectorized model given
+    assert obj.batch([DEFAULT_TUNABLES]) == [1.0]
+
+
+def test_batch_measure_is_a_probe():
+    """measure_batch must not move the applied configuration."""
+    sim = SimulatorExecutor([("dense_train", 4)])
+    sim.apply(DEFAULT_TUNABLES.replace(microbatches=8))
+    sim.measure_batch([DEFAULT_TUNABLES])
+    assert sim.current.microbatches == 8
+
+
+# -- warm start ---------------------------------------------------------------
+
+
+def _char(mean, F=8):
+    v = np.full(F, mean, np.float32)
+    one = np.ones(F, np.float32)
+    return {"mean": v, "std": one, "min": v - 1, "max": v + 1,
+            "p75": v, "p90": v, "n": 50}
+
+
+def _warm_scenario(warm_start):
+    """Workload A tuned and stored; workload B re-observed under a fresh
+    label with a near-identical characterization (the ZSL/re-observation
+    case the paper's reuse story anticipates)."""
+    space = {"microbatches": [1, 2, 4, 8], "attn_q_chunk": [512, 1024, 2048]}
+    optimum = DEFAULT_TUNABLES.replace(microbatches=8, attn_q_chunk=2048)
+
+    def objective(t):
+        return (abs(t.microbatches - 8) / 8
+                + abs(t.attn_q_chunk - 2048) / 2048)
+
+    db = WorkloadDB()
+    label_a = db.insert(_char(0.0))
+    db.set_config(label_a, optimum.as_dict(), optimal=True)
+    label_b = db.insert(_char(0.05))
+    plugin = KermitPlugin(db, None, Explorer(space), warm_start=warm_start)
+    ctx = WorkloadContext(window_id=0, timestamp=0.0, current_label=label_b,
+                          predicted={}, in_transition=False)
+    tun = plugin.on_resource_request(
+        ExecutorObjective(CallableExecutor(objective)), ctx=ctx)
+    return tun, plugin.stats, optimum, db, label_b
+
+
+def test_warm_start_picks_stored_config():
+    tun, stats, optimum, db, label_b = _warm_scenario(warm_start=True)
+    assert stats.warm_starts == 1
+    assert stats.local_searches == 1 and stats.global_searches == 0
+    assert tun == optimum                      # refined straight to it
+    # the committed result is stored for B, so the NEXT request reuses it
+    assert db.get(label_b).has_optimal
+    tun_cold, stats_cold, *_ = _warm_scenario(warm_start=False)
+    assert stats_cold.warm_starts == 0 and stats_cold.global_searches == 1
+    assert stats.evaluations < stats_cold.evaluations
+
+
+def test_warm_start_off_space_config_snaps_to_grid():
+    """A stored config whose knob values are outside the current search
+    space must NOT short-circuit the warm local refinement (empty neighbour
+    ring -> stale config committed as optimal forever)."""
+    space = {"microbatches": [1, 2, 4, 8], "attn_q_chunk": [512, 1024, 2048]}
+
+    def objective(t):
+        return (abs(t.microbatches - 8) / 8
+                + abs(t.attn_q_chunk - 2048) / 2048)
+
+    db = WorkloadDB()
+    label_a = db.insert(_char(0.0))
+    # stored under a DIFFERENT space: neither value is a current candidate
+    db.set_config(label_a, DEFAULT_TUNABLES.replace(
+        microbatches=6, attn_q_chunk=1536).as_dict(), optimal=True)
+    label_b = db.insert(_char(0.05))
+    plugin = KermitPlugin(db, None, Explorer(space))
+    ctx = WorkloadContext(window_id=0, timestamp=0.0, current_label=label_b,
+                          predicted={}, in_transition=False)
+    tun = plugin.on_resource_request(
+        ExecutorObjective(CallableExecutor(objective)), ctx=ctx)
+    assert plugin.stats.warm_starts == 1
+    assert plugin.stats.evaluations > 1             # the ring was not empty
+    assert tun.microbatches == 8 and tun.attn_q_chunk == 2048
+
+
+def test_nearest_config_ranks_by_distance_and_skips_configless():
+    db = WorkloadDB()
+    a = db.insert(_char(0.0))
+    db.insert(_char(0.01))                    # nearer, but has no config
+    c = db.insert(_char(5.0), is_synthetic=True)
+    db.set_config(a, {"microbatches": 2}, optimal=True)
+    db.set_config(c, {"microbatches": 4}, optimal=False)
+    cfg, label, dist = db.nearest_config(_char(0.02))
+    assert label == a and cfg == {"microbatches": 2}
+    assert dist == pytest.approx(np.sqrt(8) * 0.02, rel=1e-3)
+    # synthetic (ZSL-anticipated) records are eligible warm-start donors
+    cfg, label, _ = db.nearest_config(_char(4.9))
+    assert label == c and cfg == {"microbatches": 4}
+    assert db.nearest_config(_char(0.0), exclude_label=a)[1] == c
+
+
+def test_warm_start_config_knob():
+    cfg = KermitConfig(plan=PlanConfig(batch_eval=False, warm_start=False,
+                                       chunk=128, max_trace=64))
+    d = cfg.to_dict()
+    assert d["plan"]["warm_start"] is False and d["plan"]["chunk"] == 128
+    assert KermitConfig.from_dict(d) == cfg

@@ -9,11 +9,13 @@ import repro.kermit as kermit
 PUBLIC_API = [
     "AnalysisConfig",
     "AutonomicEvent",
+    "BatchExecutor",
     "CallableExecutor",
     "EVENT_KINDS",
     "EventKind",
     "ExecConfig",
     "Executor",
+    "ExecutorObjective",
     "IMPL_CHOICES",
     "KermitConfig",
     "KermitSession",
