@@ -37,8 +37,9 @@ def main(argv=None) -> None:
     from benchmarks import (bench_analysis_latency, bench_autonomic_e2e,
                             bench_change_detector, bench_classifiers,
                             bench_clustering, bench_explorer, bench_kernels,
-                            bench_monitor_throughput, bench_predictor,
-                            bench_roofline, bench_transition, bench_zsl)
+                            bench_knowledge, bench_monitor_throughput,
+                            bench_predictor, bench_roofline, bench_transition,
+                            bench_zsl)
     suites = [
         ("change_detector[fig9]", bench_change_detector),
         ("classifiers[fig6]", bench_classifiers),
@@ -49,6 +50,7 @@ def main(argv=None) -> None:
         ("kernels", bench_kernels),
         ("roofline[deliverable-g]", bench_roofline),
         ("plan_explorer[claims 30%/92.5% + batched search]", bench_explorer),
+        ("knowledge[zsl k-way + drift + match throughput]", bench_knowledge),
         ("analysis_latency[perf]", bench_analysis_latency),
         ("monitor_throughput[perf]", bench_monitor_throughput),
         ("autonomic_e2e", bench_autonomic_e2e),

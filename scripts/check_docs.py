@@ -1,0 +1,88 @@
+"""Documentation checks (CI `docs` job).
+
+1. **Intra-repo link check** — every relative markdown link in every tracked
+   `.md` file must resolve to an existing file (anchors stripped; external
+   schemes skipped).  Catches renamed/moved docs the moment they break.
+2. **Doctests in docs** — fenced ```python blocks in `docs/*.md` that
+   contain `>>>` examples are executed with `doctest`, so the API examples
+   in the documentation cannot silently rot.
+
+Run locally: ``PYTHONPATH=src python scripts/check_docs.py``
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images' srcsets etc.; nested parens unsupported
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"```python\n(.*?)```", re.S)
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def _tracked_markdown() -> list[Path]:
+    out = subprocess.run(["git", "ls-files", "*.md"], cwd=ROOT,
+                         capture_output=True, text=True, check=True)
+    return [ROOT / line for line in out.stdout.splitlines() if line]
+
+
+def check_links(files: list[Path]) -> list[str]:
+    errors = []
+    for md in files:
+        for m in _LINK.finditer(md.read_text()):
+            target = m.group(1)
+            if target.startswith(_SKIP_SCHEMES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (md.parent / rel).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_doctests(files: list[Path]) -> tuple[int, list[str]]:
+    parser = doctest.DocTestParser()
+    runner = doctest.DocTestRunner(optionflags=doctest.ELLIPSIS
+                                   | doctest.NORMALIZE_WHITESPACE)
+    n_examples, errors = 0, []
+    for md in files:
+        text = md.read_text()
+        for i, block in enumerate(_FENCE.findall(text)):
+            if ">>>" not in block:
+                continue
+            name = f"{md.relative_to(ROOT)}[block {i}]"
+            test = parser.get_doctest(block, {}, name, str(md), 0)
+            n_examples += len(test.examples)
+            out: list[str] = []
+            runner.run(test, out=out.append)
+            if runner.failures:
+                errors.append(f"{name}:\n" + "".join(out))
+                runner = doctest.DocTestRunner(
+                    optionflags=doctest.ELLIPSIS
+                    | doctest.NORMALIZE_WHITESPACE)
+    return n_examples, errors
+
+
+def main() -> int:
+    files = _tracked_markdown()
+    print(f"checking {len(files)} markdown files")
+    link_errors = check_links(files)
+    doc_files = [f for f in files if f.parent.name == "docs"]
+    n_examples, doc_errors = check_doctests(doc_files)
+    print(f"links ok in {len(files) - len({e.split(':')[0] for e in link_errors})} files; "
+          f"ran {n_examples} doctest examples from {len(doc_files)} docs")
+    for e in link_errors + doc_errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if (link_errors or doc_errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

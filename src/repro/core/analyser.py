@@ -111,6 +111,21 @@ class KermitAnalyser:
                 rep.new_labels.append(new)
                 window_labels[members] = new
         rep.window_labels = window_labels
+        # convergence/bound maintenance: classes whose characterizations have
+        # converged merge (newer label aliased onto older), over-bound stores
+        # evict.  Remap freshly-labelled windows by membership — aliases
+        # resolve to the survivor, labels the DB no longer holds (evicted by
+        # this pass OR by an insert earlier in the loop) drop to noise — so
+        # the training set never references a label the DB cannot resolve.
+        self.db.consolidate()
+        for u in np.unique(window_labels):
+            if u < 0:
+                continue
+            r = self.db.resolve(int(u))
+            if r not in self.db.records:
+                r = -1
+            if r != u:
+                window_labels[window_labels == u] = r
         self.db.save()
         rep.discover_seconds = time.perf_counter() - t0
         return rep
@@ -118,7 +133,7 @@ class KermitAnalyser:
     # -- training pipeline (§7.2 steps 1-9) ------------------------------------
 
     def train(self, ws: WindowSeries, rep: AnalysisReport, *,
-              synthesize_hybrids: bool = True, seed: int = 0,
+              synthesize_hybrids: bool = True, zsl_k: int = 2, seed: int = 0,
               predictor_cfg: Optional[PredictorConfig] = None,
               forest_cfg: Optional[ForestConfig] = None):
         t0 = time.perf_counter()
@@ -129,19 +144,34 @@ class KermitAnalyser:
         X = ws.mean[mask]
         y = wl[mask]
 
-        # step 7: ZSL synthesis from pure characterizations
+        # step 7: ZSL synthesis from pure characterizations (k-way mixtures
+        # up to ``zsl_k`` concurrent archetypes).  One synthetic WorkloadDB
+        # record per combination, ever: combos the knowledge base already
+        # anticipates reuse their stored label (prototype refreshed) instead
+        # of inserting a duplicate on every analysis run.
         if synthesize_hybrids:
             pure = self.db.pure_characterizations()
             Xs, ys, hybrids = synthesize(
                 pure, n_per_class=100, seed=seed,
-                next_label=self.db._next_label)
+                next_label=self.db._next_label, k=zsl_k)
             for h in hybrids:
-                self.db.insert(h.prototype, is_synthetic=True, pair=h.pair,
-                               label=h.label)
+                existing = self.db.find_synthetic(h.pair)
+                if existing is not None and existing != h.label:
+                    self.db.refresh_synthetic(existing, h.prototype)
+                    ys[ys == h.label] = existing
+                elif len(self.db.records) < self.db.max_records:
+                    self.db.insert(h.prototype, is_synthetic=True,
+                                   pair=h.pair, label=h.label)
+                # a full store skips the remaining anticipations rather
+                # than churning labels through eviction every run; their
+                # training rows are dropped by the membership filter below
             Xb, yb = sample_pure(pure, n_per_class=100, seed=seed + 1)
             if Xs.size:
-                X = np.concatenate([X, Xb, Xs])
-                y = np.concatenate([y, yb, ys])
+                # a full store may have evicted an earlier hybrid while
+                # inserting a later one; never train on unresolvable labels
+                present = np.isin(ys, np.asarray(self.db.labels()))
+                X = np.concatenate([X, Xb, Xs[present]])
+                y = np.concatenate([y, yb, ys[present]])
 
         n_classes = int(max(self.db.labels(), default=0)) + 1
         max_samples = _FAST_MAX_SAMPLES if self.fast else 0

@@ -27,11 +27,23 @@ def l2_drift(c1: dict, c2: dict) -> float:
     return float(np.linalg.norm(np.asarray(c1["mean"]) - np.asarray(c2["mean"])))
 
 
-def merge_characterizations(old: dict, new: dict) -> dict:
-    """Update a stored characterization with a new batch (running merge)."""
+def merge_characterizations(old: dict, new: dict, *,
+                            min_new_weight: float = 0.0) -> dict:
+    """Update a stored characterization with a new batch (running merge).
+
+    ``min_new_weight`` is an EMA floor on the fresh batch's blend weight
+    (``KnowledgeConfig.drift_alpha``): with the default 0 the merge is purely
+    count-weighted (the seed behaviour — a long history freezes the stored
+    characterization), while a positive floor keeps the class tracking a
+    slowly drifting workload regardless of how much history it has."""
     n1, n2 = old["n"], new["n"]
     n = n1 + n2
-    w1, w2 = n1 / n, n2 / n
+    w2 = n2 / n
+    if min_new_weight > w2:
+        w2 = min_new_weight
+        w1 = 1.0 - w2
+    else:
+        w1 = n1 / n          # exact seed arithmetic when the floor is idle
     mean = w1 * old["mean"] + w2 * new["mean"]
     # combine variances about the new mean
     var = (w1 * (old["std"] ** 2 + (old["mean"] - mean) ** 2)

@@ -139,6 +139,9 @@ class KermitPlugin:
             self.stats.default_used += 1
             return self.default
 
+        # a classifier trained before a Knowledge-phase merge may still
+        # predict the absorbed label; the alias map keeps it resolvable
+        label = self.db.resolve(label)
         rec = self.db.get(label)
         if rec is None:                       # classifier ahead of DB
             self.stats.default_used += 1

@@ -6,7 +6,8 @@ Pure archetypes are TPU-runtime phases with distinct telemetry signatures
 patterns). ``generate`` renders a schedule of (archetype, n_windows) segments
 joined by linear-ramp transitions, returning raw samples plus ground-truth
 window labels and transition flags; ``generate_hybrid`` renders convex blends
-of two archetypes (multi-user windows) for the ZSL evaluation.
+of k >= 2 archetypes (multi-user windows) for the ZSL evaluation — Beta(2,2)
+per-sample weights for pairs (seed-identical), Dirichlet(2,...,2) beyond.
 """
 from __future__ import annotations
 
@@ -78,18 +79,45 @@ def generate(schedule, *, window_size: int = 32, transition_windows: int = 2,
 
 
 def generate_hybrid(pair, *, n_windows: int = 40, window_size: int = 32,
-                    seed: int = 0, alpha: float | None = None):
-    """Multi-user hybrid stream: convex blend of two archetypes."""
+                    seed: int = 0, alpha: float | None = None,
+                    weights=None):
+    """Multi-user hybrid stream: convex blend of k >= 2 archetypes.
+
+    ``pair`` is a tuple of archetype names.  Two archetypes with no explicit
+    ``weights`` keep the original Beta(2,2) per-sample blend (bit-identical
+    to the seed implementation for the same ``seed``); three or more draw
+    per-sample mixture weights from Dirichlet(2,...,2), matching the
+    synthesizer's k-way class-descriptor model so multi-user scenarios with
+    3+ concurrent archetypes can be generated and ZSL-matched end to end.
+    ``weights`` pins the blend to fixed mixture proportions instead.
+    """
+    names = tuple(pair)
+    if alpha is not None and (len(names) != 2 or weights is not None):
+        raise ValueError(
+            "alpha= pins a 2-way Beta blend; use weights= for k-way "
+            "mixtures or fixed proportions")
     rng = np.random.default_rng(seed)
-    m1, s1 = archetype_stats(pair[0])
-    m2, s2 = archetype_stats(pair[1])
     n = n_windows * window_size
-    if alpha is None:
-        a = rng.beta(2, 2, (n, 1)).astype(np.float32)
+    if len(names) == 2 and weights is None:
+        m1, s1 = archetype_stats(names[0])
+        m2, s2 = archetype_stats(names[1])
+        if alpha is None:
+            a = rng.beta(2, 2, (n, 1)).astype(np.float32)
+        else:
+            a = np.full((n, 1), alpha, np.float32)
+        mean = a * m1 + (1 - a) * m2
+        std = np.sqrt(a ** 2 * s1 ** 2 + (1 - a) ** 2 * s2 ** 2)
+        return (mean + rng.normal(size=mean.shape) * std).astype(np.float32)
+    stats = [archetype_stats(name) for name in names]
+    M = np.stack([m for m, _ in stats]).astype(np.float64)   # (k, F)
+    S = np.stack([s for _, s in stats]).astype(np.float64)
+    if weights is None:
+        w = rng.dirichlet(np.full(len(names), 2.0), size=n)  # (n, k)
     else:
-        a = np.full((n, 1), alpha, np.float32)
-    mean = a * m1 + (1 - a) * m2
-    std = np.sqrt(a ** 2 * s1 ** 2 + (1 - a) ** 2 * s2 ** 2)
+        w = np.asarray(weights, np.float64)
+        w = np.tile(w / w.sum(), (n, 1))
+    mean = w @ M
+    std = np.sqrt((w ** 2) @ (S ** 2))
     return (mean + rng.normal(size=mean.shape) * std).astype(np.float32)
 
 

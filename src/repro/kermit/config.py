@@ -85,6 +85,8 @@ class AnalysisConfig:
     dbscan_min_pts: int = 4
     max_classes: int = 64
     synthesize_hybrids: bool = True  # ZSL hybrid synthesis (paper §7 step 7)
+    zsl_k: int = 3                   # max mixture order: anticipate up to
+    #                                  zsl_k concurrent archetypes per window
 
 
 @dataclass(frozen=True)
@@ -103,9 +105,15 @@ class PlanConfig:
 
 @dataclass(frozen=True)
 class KnowledgeConfig:
-    """WorkloadDB: persistence root (lz/tz/az zones) + drift threshold."""
+    """WorkloadDB: persistence root (lz/tz/az zones), drift thresholds and
+    the bounded-store policy (see docs/api.md "Knowledge")."""
     root: Optional[str] = None
     drift_eps: float = 1.0
+    drift_alpha: float = 0.0         # EMA floor on fresh-batch blend weight
+    #                                  (0 = seed count-weighted merge)
+    merge_eps: float = 0.0           # class-convergence merge distance
+    #                                  (0 = merging disabled)
+    max_records: int = 1024          # bounded store: LRU/priority eviction
 
 
 @dataclass(frozen=True)

@@ -18,6 +18,13 @@ class EventKind(str, Enum):
     ANALYSIS = "analysis"        # off-line KWanl run (discovery + retraining)
     RETUNE = "retune"            # plan phase committed a new configuration
     STEADY = "steady"            # reserved: steady-window heartbeat (not emitted)
+    # Knowledge-phase adaptation (WorkloadDB journal, drained per analysis):
+    DRIFT = "drift"              # class characterization drifted (detail:
+    #                              distance/score; rediscovered=True when the
+    #                              class diverged past the re-anchor bound)
+    MERGE = "merge"              # two classes converged and merged (detail:
+    #                              absorbed label, distance)
+    EVICT = "evict"              # bounded store evicted a record
 
     def __str__(self) -> str:    # json.dumps/logging friendliness
         return self.value

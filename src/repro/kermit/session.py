@@ -54,7 +54,10 @@ class KermitSession:
 
         mc, ac, pc, kc = cfg.monitor, cfg.analysis, cfg.plan, cfg.knowledge
         root = Path(kc.root) if kc.root else None
-        self.db = WorkloadDB(root, drift_eps=kc.drift_eps)
+        self.db = WorkloadDB(root, drift_eps=kc.drift_eps, impl=cfg.impl,
+                             drift_alpha=kc.drift_alpha,
+                             merge_eps=kc.merge_eps,
+                             max_records=kc.max_records)
         det = detector or ChangeDetector(alpha=mc.detector_alpha,
                                          quorum=mc.detector_quorum)
         self.monitor = KermitMonitor(
@@ -203,7 +206,8 @@ class KermitSession:
             ws = self.monitor.window_series()
             if ws is not None and len(ws) >= ac.min_windows:
                 rep = self.analyser.run(
-                    ws, synthesize_hybrids=ac.synthesize_hybrids)
+                    ws, synthesize_hybrids=ac.synthesize_hybrids,
+                    zsl_k=ac.zsl_k)
                 self.monitor.classifier = self.analyser.classifier
                 self.monitor.predictor = self.analyser.predictor
                 self._last_analysis_seconds = rep.analysis_seconds
@@ -214,6 +218,18 @@ class KermitSession:
                             "new": rep.new_labels,
                             "drifted": rep.drifted_labels,
                             "seconds": rep.analysis_seconds}))
+                # Knowledge-phase adaptation events (drift / merge / evict)
+                # journaled by the WorkloadDB during the run surface on the
+                # typed stream; adaptation touching the active workload
+                # forces a re-plan at the next steady window — the loop
+                # re-tunes a drifted or merged class without any human call
+                for je in self.db.drain_events():
+                    self._record(AutonomicEvent(
+                        ctx.window_id, EventKind(je["kind"]).value,
+                        je["label"], detail=je["detail"]))
+                    if self._last_label is not None and self._last_label in (
+                            je["label"], je["detail"].get("absorbed")):
+                        self.invalidate()
 
         # plan/execute at workload boundaries (label change or fresh optimum)
         label = ctx.current_label

@@ -1,0 +1,405 @@
+"""Knowledge phase at scale (ISSUE 5): vectorized WorkloadDB parity, k-way
+zero-shot synthesis properties, drift adaptation / merge / re-discovery
+event sequences, and the v2 persistence round-trip (+ v1 migration)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.characterize import characterize
+from repro.core.knowledge import (REDISCOVER_MULT, UNKNOWN, WorkloadDB,
+                                  WorkloadRecord)
+from repro.core.simulator import archetype_stats, generate_hybrid
+from repro.core.synthesizer import mixture_weights, synthesize
+from repro.kermit import (AnalysisConfig, EventKind, KermitConfig,
+                          KnowledgeConfig, KermitSession, MonitorConfig,
+                          PlanConfig, SimulatorExecutor)
+
+
+def _char(mean, F=8, std=1.0, n=50):
+    v = np.full(F, mean, np.float32)
+    s = np.full(F, std, np.float32)
+    return {"mean": v, "std": s, "min": v - 1, "max": v + 1,
+            "p75": v, "p90": v, "n": n}
+
+
+def _random_db(rng, n_records, F=16, impl="auto"):
+    db = WorkloadDB(impl=impl)
+    for i in range(n_records):
+        m = rng.uniform(0.05, 1.0, F).astype(np.float32)
+        s = np.maximum(0.01, 0.1 * m).astype(np.float32)
+        w = (m + rng.normal(size=(40, F)) * s).astype(np.float32)
+        db.insert(characterize(w), is_synthetic=(i % 5 == 4))
+        if i % 3 == 0:
+            db.set_config(i, {"microbatches": i % 8}, optimal=True)
+    return db
+
+
+# -- vectorized vs legacy parity ----------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_find_match_vectorized_legacy_parity(seed):
+    rng = np.random.default_rng(seed)
+    db = _random_db(rng, n_records=33 + seed)
+    for qi in range(20):
+        if qi % 2 == 0:                       # re-observation of a stored class
+            src = db.records[rng.integers(len(db.records))].characterization
+            w = (src["mean"] + rng.normal(size=(40, 16)) * src["std"])
+        else:                                 # a never-seen workload
+            w = rng.uniform(0, 1, (40, 16))
+        q = characterize(np.asarray(w, np.float32))
+        assert db.find_match(q) == db.find_match(q, impl="legacy")
+        fast = db.nearest_config(q)
+        legacy = db.nearest_config(q, impl="legacy")
+        assert (fast is None) == (legacy is None)
+        if fast is not None:
+            assert fast[:2] == legacy[:2]     # same config + label
+            assert fast[2] == pytest.approx(legacy[2], abs=1e-5)
+
+
+def test_parity_survives_inplace_mutation():
+    """observe/set_config update the SoA mirror row in place — the fast
+    path must stay bit-identical to the legacy scan afterwards."""
+    rng = np.random.default_rng(7)
+    db = _random_db(rng, n_records=12)
+    db.observe(0, _char(0.3, F=16))
+    db.set_config(5, {"microbatches": 7}, optimal=True)
+    db.records[5].config = None          # rediscovery-style config drop
+    db._update_row(db.records[5])
+    for v in (0.0, 0.3, 0.5):
+        q = _char(v, F=16)
+        assert db.find_match(q) == db.find_match(q, impl="legacy")
+        fast, legacy = db.nearest_config(q), db.nearest_config(q,
+                                                               impl="legacy")
+        assert (fast is None) == (legacy is None)
+        if fast:
+            assert fast[:2] == legacy[:2]
+
+
+def test_merge_keeps_absorbed_optimal_config():
+    db = WorkloadDB(merge_eps=0.5)
+    a = db.insert(_char(0.0))
+    b = db.insert(_char(0.05))
+    db.set_config(a, {"microbatches": 1}, optimal=False)   # stale
+    db.set_config(b, {"microbatches": 8}, optimal=True)    # tuned optimum
+    db.consolidate()
+    assert db.resolve(b) == a
+    assert db.get(a).config == {"microbatches": 8}
+    assert db.get(a).has_optimal
+
+
+def test_journal_stays_bounded_without_drain():
+    from repro.core.knowledge import JOURNAL_BOUND
+    db = WorkloadDB(drift_eps=0.01, drift_alpha=0.5)
+    label = db.insert(_char(0.0))
+    for i in range(JOURNAL_BOUND + 50):
+        db.observe(label, _char(0.2 if i % 2 else 0.0))   # drift every call
+    assert len(db._journal) <= JOURNAL_BOUND + 1
+
+
+def test_full_store_skips_synthetic_churn():
+    """When the store is at its bound, re-synthesis must not churn labels
+    through insert/evict cycles run after run."""
+    from repro.core.analyser import KermitAnalyser
+    from repro.core.simulator import generate
+    db = WorkloadDB(max_records=3)
+    an = KermitAnalyser(db, dbscan_eps=0.35)
+    sim = generate([("dense_train", 14), ("decode_serve", 12),
+                    ("moe_train", 14)], window_size=32, seed=11)
+    an.run(sim.windows, zsl_k=3)         # 3 pure classes fill the store
+    labels_after_first = set(db.labels())
+    counter = db._next_label
+    an.run(sim.windows, zsl_k=3)
+    assert set(db.labels()) == labels_after_first
+    assert db._next_label == counter     # no label churn across runs
+
+
+def test_find_match_empty_and_all_synthetic():
+    db = WorkloadDB()
+    assert db.find_match(_char(0.0)) is None
+    db.insert(_char(0.0), is_synthetic=True, pair=(0, 1))
+    # synthetic records never match (they are anticipations, not observations)
+    assert db.find_match(_char(0.0)) is None
+    assert db.find_match(_char(0.0), impl="legacy") is None
+    # ...but they are eligible warm-start donors
+    db.set_config(0, {"microbatches": 2}, optimal=False)
+    assert db.nearest_config(_char(0.0))[1] == 0
+
+
+def test_match_respects_feature_mask():
+    from repro.core.change_detector import ChangeDetector
+    mask = np.zeros(8, bool)
+    mask[:4] = True                      # only the first 4 features count
+    db = WorkloadDB(matcher=ChangeDetector(alpha=0.001, quorum=0.5,
+                                           feature_mask=mask))
+    base = _char(0.5, std=0.05)
+    label = db.insert(base)
+    q = dict(base, mean=base["mean"].copy())
+    q["mean"][4:] += 10.0                # huge shift, only in masked-out dims
+    assert db.find_match(q) == label
+    assert db.find_match(q, impl="legacy") == label
+
+
+# -- k-way synthesis properties -----------------------------------------------
+
+
+def test_mixture_weights_sum_to_one():
+    rng = np.random.default_rng(0)
+    for k in (2, 3, 4):
+        w = mixture_weights(rng, k, (7, 50))
+        assert w.shape == (7, 50, k)
+        assert np.allclose(w.sum(-1), 1.0)
+        assert (w >= 0).all()
+
+
+def _seed_pairwise(pure, n_per_class, seed, next_label):
+    """The seed implementation, inlined verbatim as the parity oracle."""
+    rng = np.random.default_rng(seed)
+    labels = sorted(pure)
+    nl = next_label
+    X, y = [], []
+    for a in range(len(labels)):
+        for b in range(a + 1, len(labels)):
+            la, lb = labels[a], labels[b]
+            ma, sa = np.asarray(pure[la]["mean"]), np.asarray(pure[la]["std"])
+            mb, sb = np.asarray(pure[lb]["mean"]), np.asarray(pure[lb]["std"])
+            alpha = rng.beta(2.0, 2.0, (n_per_class, 1))
+            mean = alpha * ma + (1 - alpha) * mb
+            std = np.sqrt(alpha ** 2 * sa ** 2 + (1 - alpha) ** 2 * sb ** 2)
+            X.append(mean + rng.normal(size=mean.shape) * std)
+            y.append(np.full(n_per_class, nl))
+            nl += 1
+    return np.concatenate(X).astype(np.float32), np.concatenate(y)
+
+
+def test_pairwise_synthesis_unchanged_vs_seed():
+    pure = {i: {"mean": archetype_stats(a)[0], "std": archetype_stats(a)[1],
+                "n": 100}
+            for i, a in enumerate(["dense_train", "decode_serve",
+                                   "long_prefill"])}
+    X2, y2, classes2 = synthesize(pure, n_per_class=60, seed=3, k=2)
+    Xs, ys = _seed_pairwise(pure, 60, 3, next_label=3)
+    np.testing.assert_array_equal(X2, Xs)
+    np.testing.assert_array_equal(y2, ys)
+    # enabling k=3 must not perturb the pairwise block (independent stream)
+    X3, y3, classes3 = synthesize(pure, n_per_class=60, seed=3, k=3)
+    np.testing.assert_array_equal(X3[:len(X2)], X2)
+    assert [c.pair for c in classes3[:len(classes2)]] == \
+        [c.pair for c in classes2]
+
+
+def test_kway_synthesis_shapes_and_prototypes():
+    pure = {i: _char(float(i), F=6, std=0.1, n=30) for i in range(4)}
+    X, y, classes = synthesize(pure, n_per_class=20, seed=0, k=3)
+    pairs = [c for c in classes if len(c.pair) == 2]
+    triples = [c for c in classes if len(c.pair) == 3]
+    assert len(pairs) == 6 and len(triples) == 4
+    assert X.shape == (10 * 20, 6)
+    assert sorted(set(y)) == [c.label for c in classes]
+    # equal-weight prototype of combo (0,1,2): mean = 1.0
+    t = [c for c in triples if c.pair == (0, 1, 2)][0]
+    assert np.allclose(t.prototype["mean"], 1.0)
+    assert np.allclose(t.prototype["std"], np.sqrt(3 * 0.1 ** 2) / 3)
+    # labels continue the counter in combination order
+    assert [c.label for c in classes] == list(range(4, 14))
+
+
+def test_generate_hybrid_kway_and_pair_stability():
+    pair_old = generate_hybrid(("dense_train", "decode_serve"), n_windows=4,
+                               seed=5)
+    pair_new = generate_hybrid(("dense_train", "decode_serve"), n_windows=4,
+                               seed=5)
+    np.testing.assert_array_equal(pair_old, pair_new)
+    tri = generate_hybrid(("dense_train", "decode_serve", "long_prefill"),
+                          n_windows=4, seed=5)
+    assert tri.shape == pair_old.shape
+    m = np.stack([archetype_stats(a)[0] for a in
+                  ("dense_train", "decode_serve", "long_prefill")])
+    # pinned equal weights concentrate around the prototype mean
+    fixed = generate_hybrid(("dense_train", "decode_serve", "long_prefill"),
+                            n_windows=40, seed=5, weights=(1, 1, 1))
+    assert np.allclose(fixed.mean(0), m.mean(0), atol=0.02)
+
+
+# -- drift adaptation / merge / re-discovery ----------------------------------
+
+
+def test_observe_drift_alpha_tracks_and_bounds_evidence():
+    db = WorkloadDB(drift_eps=10.0, drift_alpha=0.25)
+    label = db.insert(_char(0.0, n=40))
+    for step in range(1, 9):
+        db.observe(label, _char(0.1 * step, n=40))
+    rec = db.get(label)
+    # EMA floor: the stored mean tracks within a few steps of the target
+    assert abs(rec.characterization["mean"][0] - 0.8) < 0.3
+    # effective evidence is bounded at ~n/alpha, not the 360 observed
+    assert rec.characterization["n"] <= 160
+    assert rec.observations == 9 * 40
+
+
+def test_drift_event_and_rediscovery_sequence():
+    db = WorkloadDB(drift_eps=0.5, drift_alpha=0.5)
+    label = db.insert(_char(0.0))
+    db.set_config(label, {"microbatches": 4}, optimal=True)
+    # drift: beyond drift_eps -> flagged, optimal cleared, journal entry
+    assert db.observe(label, _char(0.4)) is True      # |Δ|=0.4*sqrt(8)>0.5
+    events = db.drain_events()
+    assert [e["kind"] for e in events] == ["drift"]
+    assert events[0]["label"] == label
+    assert not events[0]["detail"]["rediscovered"]
+    assert db.get(label).is_drifting and not db.get(label).has_optimal
+    # keep pushing: cumulative wander beyond REDISCOVER_MULT*drift_eps
+    # re-anchors the class and drops the (stale) config
+    db.set_config(label, {"microbatches": 4}, optimal=True)
+    shift = REDISCOVER_MULT * 0.5 / np.sqrt(8)
+    for step in range(2, 8):
+        db.observe(label, _char(step * shift))
+    redisc = [e for e in db.drain_events()
+              if e["detail"].get("rediscovered")]
+    assert redisc, "divergence must trigger re-discovery"
+    rec = db.get(label)
+    assert rec.config is None and not rec.has_optimal
+
+
+def test_consolidate_merges_converged_classes_and_aliases():
+    db = WorkloadDB(merge_eps=0.5)
+    a = db.insert(_char(0.0))
+    b = db.insert(_char(0.05))
+    c = db.insert(_char(3.0))
+    db.set_config(b, {"microbatches": 2}, optimal=True)
+    entries = db.consolidate()
+    assert [e["kind"] for e in entries] == ["merge"]
+    assert entries[0] == {"kind": "merge", "label": a,
+                          "detail": {"absorbed": b,
+                                     "distance": pytest.approx(
+                                         0.05 * np.sqrt(8), rel=1e-3)}}
+    # the absorbed label resolves to the survivor; its config migrated
+    assert db.resolve(b) == a
+    assert db.get(b) is db.get(a)
+    assert db.get(a).config == {"microbatches": 2}
+    assert db.labels() == [a, c]
+    # far-apart classes never merge
+    assert not db.consolidate()
+
+
+def test_eviction_prefers_synthetic_then_lru():
+    db = WorkloadDB(max_records=4)
+    keep = [db.insert(_char(float(i))) for i in range(3)]
+    for l in keep:
+        db.set_config(l, {"microbatches": 1}, optimal=True)
+    syn = db.insert(_char(10.0), is_synthetic=True, pair=(0, 1))
+    over = db.insert(_char(11.0))            # 5th record: bound enforced
+    evicted = [e for e in db.drain_events() if e["kind"] == "evict"]
+    assert [e["label"] for e in evicted] == [syn]
+    assert db.get(syn) is None and db.get(over) is not None
+    assert len(db.records) == 4
+    # labels of evicted records are never reused
+    assert db.new_label() > over
+
+
+def test_session_emits_drift_and_merge_events(tmp_path):
+    """End-to-end: a shifted re-run of the same archetype drives the
+    Knowledge phase to flag drift on the typed event stream — no manual
+    relabel/reinsert calls anywhere."""
+    cfg = KermitConfig(
+        monitor=MonitorConfig(window_size=8),
+        analysis=AnalysisConfig(interval=10, dbscan_eps=0.35,
+                                synthesize_hybrids=False),
+        plan=PlanConfig(space={"microbatches": [1, 2]}),
+        knowledge=KnowledgeConfig(root=str(tmp_path), drift_eps=0.2,
+                                  drift_alpha=0.3, merge_eps=0.0))
+    from repro.core.simulator import generate
+    got = []
+    with KermitSession(cfg, executor=SimulatorExecutor(
+            [("dense_train", 12)], window_size=8)) as sess:
+        sess.subscribe(EventKind.DRIFT, got.append)
+        sess.run(generate([("dense_train", 12)], window_size=8,
+                          seed=0).samples)
+        # same archetype with drift concentrated on 3 features: far enough
+        # for the drift branch (L2 > drift_eps), close enough that the
+        # Welch quorum still matches the stored class
+        shifted = generate([("dense_train", 12)], window_size=8,
+                           seed=1).samples.copy()
+        shifted[:, :3] += 0.3
+        sess.run(shifted)
+    assert got, "drift must surface on the typed event stream"
+    assert all(e.kind == EventKind.DRIFT.value for e in got)
+    assert "score" in got[0].detail
+
+
+# -- persistence: v2 round-trip + v1 migration --------------------------------
+
+
+def test_save_load_round_trips_v2_state(tmp_path):
+    db = WorkloadDB(drift_eps=0.5, drift_alpha=0.4, merge_eps=0.3)
+    a = db.insert(_char(0.0))
+    h = db.insert(_char(1.0), is_synthetic=True, pair=(a, 7, 9))
+    db.set_config(a, {"microbatches": 4}, optimal=True)
+    db.observe(a, _char(0.3))                # drift score + EMA state
+    b = db.insert(_char(0.05))
+    db.consolidate()                         # merges b into a -> alias
+    db.drain_events()
+    path = tmp_path / "snap.json"
+    db.save(path)
+
+    db2 = WorkloadDB()
+    assert db2.load(path) is True
+    assert db2.labels() == db.labels()
+    assert db2.aliases == db.aliases and db2.resolve(b) == a
+    assert db2.get(h).pair == (a, 7, 9)
+    assert isinstance(db2.get(h).pair, tuple)
+    assert db2.get(a).drift_score == pytest.approx(db.get(a).drift_score)
+    np.testing.assert_allclose(db2.get(a).origin_mean, db.get(a).origin_mean)
+    np.testing.assert_allclose(db2.get(a).characterization["mean"],
+                               db.get(a).characterization["mean"])
+    assert db2.new_label() == db._next_label        # counter restored
+    # the reloaded store answers matches identically on both paths
+    q = _char(0.1)
+    assert db2.find_match(q) == db2.find_match(q, impl="legacy")
+
+
+def test_load_migrates_v1_databases_forward(tmp_path):
+    """A database written by the pre-vectorization schema (no version field,
+    no drift/alias state) loads cleanly with defaulted new fields."""
+    c = _char(0.5, F=4)
+    v1 = {"next_label": 2, "records": [{
+        "label": 1, "characterization":
+            {k: (v.tolist() if isinstance(v, np.ndarray) else v)
+             for k, v in c.items()},
+        "config": {"microbatches": 2}, "has_optimal": True,
+        "is_drifting": False, "is_synthetic": False, "pair": [0, 1],
+        "observations": 50, "updated_at": 123.0}]}
+    path = tmp_path / "v1.json"
+    path.write_text(json.dumps(v1))
+    db = WorkloadDB()
+    assert db.load(path) is True
+    rec = db.get(1)
+    assert rec.pair == (0, 1) and rec.has_optimal
+    assert rec.drift_score == 0.0
+    np.testing.assert_allclose(rec.origin_mean, c["mean"])
+    assert db.aliases == {}
+    assert db.new_label() == 2
+    # migrated stores save back in the current format
+    db.save(path)
+    assert json.loads(path.read_text())["version"] >= 2
+
+
+def test_analyser_reuses_synthetic_records_across_runs(tmp_path):
+    """Re-synthesis of an already-anticipated combo refreshes the stored
+    record instead of inserting a duplicate — the knowledge base does not
+    grow with analysis-run count."""
+    from repro.core.analyser import KermitAnalyser
+    from repro.core.simulator import generate
+    db = WorkloadDB(tmp_path)
+    an = KermitAnalyser(db, dbscan_eps=0.35)
+    sim = generate([("dense_train", 14), ("decode_serve", 12),
+                    ("moe_train", 14)], window_size=32, seed=11)
+    an.run(sim.windows, zsl_k=3)
+    syn1 = {r.pair for r in db.records.values() if r.is_synthetic}
+    n1 = len(db.records)
+    assert any(len(p) == 3 for p in syn1), "k=3 must anticipate triples"
+    an.run(sim.windows, zsl_k=3)             # same stream, second analysis
+    syn2 = {r.pair for r in db.records.values() if r.is_synthetic}
+    assert syn2 == syn1
+    assert len(db.records) == n1
