@@ -1,0 +1,83 @@
+"""Chaos scenario harness — the self-healing claim, measured.
+
+Runs the ``repro/scenarios/manifest.json`` sweep (``--smoke`` restricts to
+the manifest's smoke subset: straggler recovery + transient failures on one
+seed) and asserts the tentpole gates hold:
+
+  straggler_recovery   a 3x persistent slowdown injected mid-run surfaces as
+                       a FAULT event, the loop re-plans with zero human
+                       calls, and post-recovery throughput is >= 90% of the
+                       journaled pre-fault baseline
+  transient_failures   with SimulatedNodeFailures at rate <= 0.05 behind the
+                       resilience layer, the loop completes and commits the
+                       same winner as a fault-free run
+  resilient parity     with zero injected faults, ResilientExecutor search
+                       results are bit-identical (winner, cost, evaluations)
+                       to the unwrapped executor
+
+Artifacts land under ``results/<RUN_ID>/``; the returned dict feeds
+``BENCH_scenarios.json`` and ``scripts/check_regression.py`` gates the
+recovery-ratio trajectory against the committed baseline in CI.
+"""
+from benchmarks.common import row
+from repro.configs.base import DEFAULT_TUNABLES
+from repro.core.explorer import Explorer
+from repro.kermit import (ExecutorObjective, ResilientExecutor,
+                          SimulatorExecutor)
+from repro.scenarios import run_manifest
+
+
+def _resilient_parity() -> dict:
+    """Zero-fault ResilientExecutor wrap must be bit-transparent."""
+    space = {"microbatches": [1, 2, 4, 8], "remat": ["dots", "none", "full"],
+             "attn_q_chunk": [512, 1024, 2048]}
+    results = {}
+    for wrap in (False, True):
+        ex = SimulatorExecutor([("dense_train", 2)], window_size=8, seed=0)
+        if wrap:
+            ex = ResilientExecutor(ex, max_retries=2)
+        res = Explorer(space).global_search(
+            ExecutorObjective(ex), DEFAULT_TUNABLES)
+        results[wrap] = (res.best.as_dict(), res.cost, res.evaluations)
+    plain, wrapped = results[False], results[True]
+    assert wrapped == plain, (
+        f"ResilientExecutor zero-fault parity broken: {wrapped} != {plain}")
+    return {"winner_identical": True, "cost": plain[1],
+            "evaluations": plain[2]}
+
+
+def main(smoke: bool = False):
+    summary = run_manifest(smoke=smoke, out_dir="results")
+    scenarios = {}
+    for r in summary["runs"]:
+        key = f"{r['scenario']}--seed{r['seed']}--{r['impl']}"
+        scenarios[key] = {"ok": r["ok"], "gates": r["gates"],
+                          "recovery_ratio": r["recovery_ratio"]}
+        row(f"scenario_{key}", "ok" if r["ok"] else "FAIL",
+            f"recovery_ratio={r['recovery_ratio']}")
+
+    # tentpole gates, asserted (not just reported)
+    strag = [r for r in summary["runs"]
+             if r["scenario"] == "straggler_recovery"]
+    assert strag, "manifest must include straggler_recovery"
+    for r in strag:
+        assert r["ok"] and r["recovery_ratio"] >= 0.9, (
+            f"straggler self-healing gate failed (seed {r['seed']}): {r}")
+    trans = [r for r in summary["runs"]
+             if r["scenario"] == "transient_failures"]
+    for r in trans:
+        assert r["gates"].get("winner_matches_clean"), (
+            f"transient-failure winner diverged from clean run: {r}")
+    assert summary["all_ok"], f"scenario gates failed: {summary['runs']}"
+
+    parity = _resilient_parity()
+    row("resilient_zero_fault_parity", "identical",
+        f"evaluations={parity['evaluations']}")
+    row("scenarios_all_ok", summary["all_ok"], f"run_id={summary['run_id']}")
+    return {"run_id": summary["run_id"], "smoke": summary["smoke"],
+            "scenarios": scenarios, "resilient_parity": parity,
+            "all_ok": summary["all_ok"]}
+
+
+if __name__ == "__main__":
+    main(smoke=True)

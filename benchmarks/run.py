@@ -38,8 +38,8 @@ def main(argv=None) -> None:
                             bench_change_detector, bench_classifiers,
                             bench_clustering, bench_explorer, bench_kernels,
                             bench_knowledge, bench_monitor_throughput,
-                            bench_predictor, bench_roofline, bench_transition,
-                            bench_zsl)
+                            bench_predictor, bench_roofline, bench_scenarios,
+                            bench_transition, bench_zsl)
     suites = [
         ("change_detector[fig9]", bench_change_detector),
         ("classifiers[fig6]", bench_classifiers),
@@ -54,6 +54,7 @@ def main(argv=None) -> None:
         ("analysis_latency[perf]", bench_analysis_latency),
         ("monitor_throughput[perf]", bench_monitor_throughput),
         ("autonomic_e2e", bench_autonomic_e2e),
+        ("scenarios[self-healing]", bench_scenarios),
     ]
     only = [s.strip() for s in args.only.split(",") if s.strip()]
     if only:

@@ -1,0 +1,90 @@
+#!/usr/bin/env python
+"""Gate the chaos-scenario trajectory: compare a fresh BENCH_scenarios.json
+against the committed baseline and fail on self-healing regressions.
+
+    python scripts/check_regression.py BENCH_scenarios.json \
+        benchmarks/baselines/BENCH_scenarios.json [--max-drop 0.2]
+
+Failure conditions:
+  * a scenario whose recovery_ratio dropped more than ``--max-drop``
+    (relative) below the baseline's
+  * a (scenario, seed, impl) cell or gate that passed in the baseline and
+    fails now
+
+New scenarios (present now, absent in the baseline) and removed ones are
+reported but do not fail the check; a missing baseline file warns and exits
+0 so the gate can be introduced before its first committed artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _scenarios(bench: dict) -> dict:
+    """Pull the scenarios map out of a BENCH_scenarios.json (either the
+    whole benchmarks/run.py report or bench_scenarios' own return value)."""
+    for entry in bench.values() if isinstance(bench, dict) else ():
+        if isinstance(entry, dict) and isinstance(entry.get("value"), dict) \
+                and "scenarios" in entry["value"]:
+            return entry["value"]["scenarios"]
+    if isinstance(bench, dict) and "scenarios" in bench:
+        return bench["scenarios"]
+    raise SystemExit("no scenarios section found in benchmark JSON")
+
+
+def compare(new: dict, old: dict, *, max_drop: float = 0.2) -> list[str]:
+    """Return a list of regression messages (empty = pass)."""
+    problems = []
+    for key, prev in old.items():
+        cur = new.get(key)
+        if cur is None:
+            print(f"note: scenario {key} removed since baseline")
+            continue
+        if prev.get("ok") and not cur.get("ok"):
+            failed = sorted(k for k, v in cur.get("gates", {}).items()
+                            if not v)
+            problems.append(f"{key}: passed in baseline, now FAILS "
+                            f"(gates: {failed})")
+        for gate, ok in prev.get("gates", {}).items():
+            if ok and not cur.get("gates", {}).get(gate, False):
+                msg = f"{key}: gate {gate} regressed (pass -> fail)"
+                if msg not in " ".join(problems):
+                    problems.append(msg)
+        p, c = prev.get("recovery_ratio"), cur.get("recovery_ratio")
+        if p is not None and c is not None and c < p * (1.0 - max_drop):
+            problems.append(
+                f"{key}: recovery_ratio {c:.3f} dropped >"
+                f"{max_drop:.0%} below baseline {p:.3f}")
+    for key in sorted(set(new) - set(old)):
+        print(f"note: new scenario {key} (no baseline)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="fresh BENCH_scenarios.json")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="max relative recovery-ratio drop (default 0.2)")
+    args = ap.parse_args(argv)
+
+    if not Path(args.baseline).exists():
+        print(f"warning: no baseline at {args.baseline} — skipping "
+              "regression gate (commit one to arm it)")
+        return 0
+    new = _scenarios(json.loads(Path(args.new).read_text()))
+    old = _scenarios(json.loads(Path(args.baseline).read_text()))
+    problems = compare(new, old, max_drop=args.max_drop)
+    for p in problems:
+        print(f"REGRESSION: {p}", file=sys.stderr)
+    if not problems:
+        print(f"ok: {len(old)} baseline scenario cells hold "
+              f"(max allowed recovery drop {args.max_drop:.0%})")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -42,6 +42,15 @@ log = logging.getLogger("kermit.plugin")
 _UNSET = object()
 
 
+def _executor_fault_types() -> tuple:
+    """Exception types that mean "the executor faulted mid-measure" (vs a
+    programming error, which must propagate).  Resolved lazily —
+    ``runtime.fault`` imports ``core``, so a module-level import would be
+    circular."""
+    from repro.runtime.fault import SimulatedNodeFailure
+    return (SimulatedNodeFailure, TimeoutError)
+
+
 @dataclass
 class PluginStats:
     requests: int = 0
@@ -51,6 +60,7 @@ class PluginStats:
     local_searches: int = 0
     warm_starts: int = 0
     stale_contexts: int = 0
+    failed_searches: int = 0
     evaluations: int = 0
 
 
@@ -157,6 +167,28 @@ class KermitPlugin:
             self.explorer.clear()
         self._memo_label = label
 
+        try:
+            res = self._search(objective, rec)
+        except _executor_fault_types() as e:
+            # a search died mid-plan on an executor fault the resilience
+            # layer could not absorb; degrade to the best configuration the
+            # knowledge base holds instead of crashing the loop.  Only
+            # executor-fault types are caught — programming errors (e.g. the
+            # unbound-executor RuntimeError) still propagate
+            log.error("search failed on executor fault (%r) — falling back "
+                      "to stored config", e)
+            self.stats.failed_searches += 1
+            if rec.config is not None:
+                return Tunables(**rec.config)
+            self.stats.default_used += 1
+            return self.default
+        self.stats.evaluations += res.evaluations
+        self.db.set_config(label, res.best.as_dict(), optimal=True)
+        self.db.save()
+        return res.best
+
+    def _search(self, objective, rec):
+        """Pick + run the Algorithm-1 search branch for ``rec``."""
         if rec.is_drifting and rec.config is not None:
             res = self.explorer.local_search(
                 objective, self._snap_to_space(rec.config))
@@ -186,7 +218,4 @@ class KermitPlugin:
             else:
                 res = self.explorer.global_search(objective, self.default)
                 self.stats.global_searches += 1
-        self.stats.evaluations += res.evaluations
-        self.db.set_config(label, res.best.as_dict(), optimal=True)
-        self.db.save()
-        return res.best
+        return res

@@ -121,6 +121,25 @@ def generate_hybrid(pair, *, n_windows: int = 40, window_size: int = 32,
     return (mean + rng.normal(size=mean.shape) * std).astype(np.float32)
 
 
+def inject_feature_shift(samples, window_size: int, at_window: int,
+                         delta: dict, duration: int | None = None):
+    """Additively shift named telemetry features from ``at_window`` on (for
+    ``duration`` windows; None = through the end) — how the chaos harness
+    renders a fault's telemetry signature (e.g. a straggler's step-time /
+    collective-stall shift) into a simulated stream so the Monitor's Welch
+    detector sees it as a workload transition.  Returns a shifted copy.
+
+    ``delta`` maps feature names (``windows.FEATURES``) to additive shifts
+    of the normalized telemetry value.
+    """
+    out = np.array(samples, np.float32)
+    lo = at_window * window_size
+    hi = len(out) if duration is None else lo + duration * window_size
+    for name, shift in delta.items():
+        out[lo:hi, FEATURES.index(name)] += np.float32(shift)
+    return out
+
+
 def random_schedule(n_segments: int, *, min_len=6, max_len=20, seed=0,
                     subset=None):
     rng = np.random.default_rng(seed)

@@ -16,6 +16,9 @@ This module's ``__all__`` is the API-stability contract, snapshotted by
 ``tests/test_public_api.py`` — additions are fine, removals and renames are
 breaking changes and must go through a deprecation cycle (see docs/api.md).
 """
+from repro.kermit.chaos import (ChaosExecutor, NoiseFault, ResilientExecutor,
+                                StragglerFault, StuckKnobFault,
+                                TransientFaults, fault_from_dict)
 from repro.kermit.config import (AnalysisConfig, ExecConfig, IMPL_CHOICES,
                                  KermitConfig, KnowledgeConfig, MonitorConfig,
                                  PlanConfig, resolve_impl)
@@ -29,6 +32,7 @@ __all__ = [
     "AutonomicEvent",
     "BatchExecutor",
     "CallableExecutor",
+    "ChaosExecutor",
     "EVENT_KINDS",
     "EventKind",
     "ExecConfig",
@@ -39,7 +43,13 @@ __all__ = [
     "KermitSession",
     "KnowledgeConfig",
     "MonitorConfig",
+    "NoiseFault",
     "PlanConfig",
+    "ResilientExecutor",
     "SimulatorExecutor",
+    "StragglerFault",
+    "StuckKnobFault",
+    "TransientFaults",
+    "fault_from_dict",
     "resolve_impl",
 ]

@@ -121,6 +121,9 @@ class ExecConfig:
     """Execute phase: how the session commits selected Tunables."""
     apply_on_retune: bool = True     # executor.apply() on every retune commit
     measure_repeats: int = 1         # trial-step repeats for measured objectives
+    recovery_threshold: float = 0.9  # pre/post-fault throughput ratio above
+    #                                  which a RECOVERY event counts as
+    #                                  recovered (chaos harness gate)
 
 
 _SUBTREES = {

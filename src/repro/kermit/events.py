@@ -25,6 +25,12 @@ class EventKind(str, Enum):
     MERGE = "merge"              # two classes converged and merged (detail:
     #                              absorbed label, distance)
     EVICT = "evict"              # bounded store evicted a record
+    # Chaos / self-healing (chaos-executor journal, drained per context):
+    FAULT = "fault"              # injected fault activated (detail: kind,
+    #                              window, pre_fault_cost for persistent ones)
+    RECOVERY = "recovery"        # first re-plan after a persistent fault
+    #                              measured the committed config (detail:
+    #                              throughput_ratio, recovered)
 
     def __str__(self) -> str:    # json.dumps/logging friendliness
         return self.value

@@ -80,8 +80,10 @@ class KermitSession:
             clock=cfg.clock, warm_start=pc.warm_start)
 
         self.executor = executor
+        self._bind_chaos(executor)
         self.current = default
         self._last_label = None
+        self._pending_fault: Optional[dict] = None
         self._since_analysis = 0
         self.events: deque[AutonomicEvent] = deque(maxlen=cfg.max_events)
         self.events_total = 0
@@ -97,7 +99,16 @@ class KermitSession:
             raise RuntimeError(
                 "session already has an executor; pass replace=True to swap")
         self.executor = executor
+        self._bind_chaos(executor)
         return self
+
+    def _bind_chaos(self, executor) -> None:
+        """Chaos-aware executors keep fault time in *windows*; bind the
+        monitor's emitted-window counter as their clock so fault activation
+        tracks the managed stream this session actually ingests."""
+        bind = getattr(executor, "bind_clock", None)
+        if callable(bind):
+            bind(lambda: self.monitor.windows_emitted)
 
     def _objective(self) -> Callable[[Tunables], float]:
         """The plan phase's candidate evaluator, bridged onto the executor.
@@ -199,6 +210,19 @@ class KermitSession:
     def _on_context(self, ctx: WorkloadContext) -> Tunables:
         self._since_analysis += 1
 
+        # chaos-aware executors journal fault activations; surface them as
+        # typed FAULT events, and arm recovery tracking for persistent ones —
+        # the forced re-plan below is the "without human intervention" path
+        drain = getattr(self.executor, "drain_fault_events", None)
+        if callable(drain):
+            for fe in drain():
+                self._record(AutonomicEvent(
+                    ctx.window_id, EventKind.FAULT.value,
+                    ctx.current_label, detail=dict(fe)))
+                if fe.get("persistent"):
+                    self._pending_fault = dict(fe)
+                    self.invalidate()
+
         # off-line subsystem cadence (A of MAPE-K)
         ac = self.config.analysis
         if self._since_analysis >= ac.interval:
@@ -248,6 +272,25 @@ class KermitSession:
             if self.executor is not None and \
                     self.config.execute.apply_on_retune:
                 self.executor.apply(tun)
+                # first re-plan after a persistent fault: measure the
+                # committed configuration under the fault and journal the
+                # throughput ratio vs the journaled pre-fault baseline
+                if self._pending_fault is not None:
+                    post = float(self.executor.measure())
+                    pre = float(self._pending_fault.get(
+                        "pre_fault_cost", post))
+                    ratio = pre / post if post > 0 else 0.0
+                    recovered = ratio >= \
+                        self.config.execute.recovery_threshold
+                    self._record(AutonomicEvent(
+                        ctx.window_id, EventKind.RECOVERY.value, label,
+                        tunables=tun.as_dict(),
+                        detail={"fault": self._pending_fault.get("kind"),
+                                "pre_fault_cost": pre, "post_cost": post,
+                                "throughput_ratio": ratio,
+                                "recovered": recovered}))
+                    if recovered:
+                        self._pending_fault = None
             self.current = tun
             self._last_label = label
         return self.current
@@ -287,4 +330,6 @@ class KermitSession:
             "plugin": vars(s).copy(),
             "events": self.events_total,
             "events_retained": len(self.events),
+            "pending_fault": self._pending_fault.get("kind")
+            if self._pending_fault else None,
         }

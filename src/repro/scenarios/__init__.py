@@ -1,0 +1,16 @@
+"""repro.scenarios — manifest-driven chaos scenario harness.
+
+Sweeps seeds x scenarios x impl backends through ``KermitSession`` with
+faults injected at the Execute boundary (``repro.kermit.chaos``), writing a
+schema-versioned JSON artifact per run under ``results/<RUN_ID>/`` plus a
+summary index — every artifact is reproducible from ``manifest.json`` alone
+(the seed, scenario spec and impl are recorded inside it).
+
+    python -m repro.scenarios.runner --smoke
+
+See ``runner.run_manifest`` and ``docs/architecture.md`` ("Self-healing").
+"""
+from repro.scenarios.runner import (SCHEMA_VERSION, load_manifest,
+                                    run_manifest, run_scenario)
+
+__all__ = ["SCHEMA_VERSION", "load_manifest", "run_manifest", "run_scenario"]

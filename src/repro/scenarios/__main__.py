@@ -1,0 +1,4 @@
+"""``python -m repro.scenarios`` — run the chaos scenario manifest."""
+from repro.scenarios.runner import main
+
+raise SystemExit(main())

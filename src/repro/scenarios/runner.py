@@ -1,0 +1,333 @@
+"""Scenario runner: manifest -> fault-injected sessions -> results/<RUN_ID>/.
+
+Each scenario in ``manifest.json`` declares a simulated workload schedule, a
+fault schedule (``repro.kermit.chaos`` specs), an optional resilience policy
+and a set of *gates* — predicates over the run's metrics that turn the
+paper's "without human intervention" claim into pass/fail data:
+
+  min_recovery_ratio    last RECOVERY event's throughput ratio >= bound and
+                        flagged recovered (the self-healing tentpole gate)
+  require_events        these typed event kinds were emitted
+  min_retunes           the loop committed at least this many retunes
+  min_known_workloads   discovery found at least this many real classes
+  winner_matches_clean  final committed Tunables equal a fault-free rerun's
+                        (graceful degradation, not silent corruption)
+  knob_pinned           the *applied* config holds the stuck knob's value
+  bitwise               elastic restore round-tripped exactly
+
+Every run writes ``<scenario>--seed<k>--<impl>.json`` (schema-versioned,
+self-describing: seed + scenario spec + impl recorded) under
+``results/<RUN_ID>/`` plus a ``summary.json`` index and a ``LATEST``
+pointer, so the artifact trajectory is a queryable history
+(``scripts/check_regression.py`` gates on it in CI).
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import time
+from collections import Counter
+from pathlib import Path
+from typing import Optional
+
+import numpy as np
+
+from repro.kermit import (AnalysisConfig, ChaosExecutor, EventKind,
+                          KermitConfig, KermitSession, KnowledgeConfig,
+                          MonitorConfig, PlanConfig, ResilientExecutor,
+                          SimulatorExecutor, fault_from_dict)
+
+SCHEMA_VERSION = 1
+DEFAULT_MANIFEST = Path(__file__).with_name("manifest.json")
+
+
+def load_manifest(path=None) -> dict:
+    with open(path or DEFAULT_MANIFEST) as f:
+        return json.load(f)
+
+
+# ---------------------------------------------------------------------------
+# scenario kinds
+# ---------------------------------------------------------------------------
+
+
+def _run_session_scenario(spec: dict, *, seed: int, impl: str) -> dict:
+    """Drive a full MAPE-K session over a simulated stream with faults
+    injected at the Execute boundary; returns the metrics dict."""
+    ws = int(spec.get("window_size", 16))
+    sim = SimulatorExecutor([tuple(s) for s in spec["schedule"]],
+                            window_size=ws, seed=seed,
+                            drift=float(spec.get("drift", 0.0)))
+    faults = [fault_from_dict(f) for f in spec.get("faults", [])]
+    chaos = ChaosExecutor(sim, faults, seed=seed, window_size=ws)
+    res_cfg = spec.get("resilient")
+    ex = ResilientExecutor(chaos, **res_cfg) if res_cfg is not None else chaos
+
+    cfg = KermitConfig(
+        monitor=MonitorConfig(window_size=ws, **spec.get("monitor", {})),
+        analysis=AnalysisConfig(**spec.get("analysis", {})),
+        plan=PlanConfig(space=spec.get("space")),
+        knowledge=KnowledgeConfig(**spec.get("knowledge", {})),
+        impl=impl)
+    events = []
+    with KermitSession(cfg, executor=ex) as session:
+        session.subscribe(None, events.append)
+        samples = chaos.samples
+        hyb = spec.get("hybrid")
+        if hyb:
+            from repro.core.simulator import generate_hybrid
+            samples = np.concatenate([samples, generate_hybrid(
+                tuple(hyb["names"]), n_windows=int(hyb.get("n_windows", 8)),
+                window_size=ws, seed=seed)])
+        session.run(samples)
+        summary = session.summary()
+        final = session.current.as_dict()
+
+    by_kind = Counter(e.kind for e in events)
+    recoveries = [e.detail for e in events
+                  if e.kind == EventKind.RECOVERY.value]
+    last = recoveries[-1] if recoveries else None
+    return {
+        "windows": summary["windows"],
+        "events": {k: int(v) for k, v in sorted(by_kind.items())},
+        "retunes": int(by_kind.get(EventKind.RETUNE.value, 0)),
+        "faults_injected": dict(chaos.injected),
+        "recovery_ratio": last["throughput_ratio"] if last else None,
+        "recovered": bool(last and last["recovered"]),
+        "recovery_attempts": len(recoveries),
+        "known_workloads": summary["known_workloads"],
+        "searches": int(summary["plugin"]["global_searches"]
+                        + summary["plugin"]["local_searches"]),
+        "reused": summary["plugin"]["reused"],
+        "evaluations": summary["plugin"]["evaluations"],
+        "failed_searches": summary["plugin"]["failed_searches"],
+        "retries": int(getattr(ex, "retries", 0)),
+        "fallbacks": int(getattr(ex, "fallbacks", 0)),
+        "final_tunables": final,
+        "applied_tunables": chaos.current.as_dict(),
+    }
+
+
+def _run_elastic_scenario(spec: dict, *, seed: int, impl: str) -> dict:
+    """Elastic mesh shrink: checkpoint a (tiny) sharded train state, then
+    ``elastic_restore`` it onto a different (degenerate host) mesh and check
+    the round-trip is bitwise exact."""
+    import tempfile
+
+    import jax
+
+    from repro.configs.base import DEFAULT_TUNABLES, reduced
+    from repro.configs.registry import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.optim.adamw import OptConfig
+    from repro.runtime.checkpoint import CheckpointManager
+    from repro.runtime.fault import elastic_restore
+    from repro.sharding import rules
+    from repro.train.step import init_train_state
+
+    cfg = reduced(get_config(spec.get("arch", "qwen2-1.5b")))
+    small = dict(n_layers=2, d_model=64, n_heads=2,
+                 n_kv_heads=1 if cfg.n_kv_heads == 1 else 2,
+                 d_ff=128, vocab=256, head_dim=32)
+    if cfg.hybrid_period:
+        small["hybrid_period"] = 2
+        small["n_layers"] = 5
+    cfg = cfg.replace(**small)
+    oc = OptConfig(lr=1e-3, warmup=2)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, oc,
+                            DEFAULT_TUNABLES)
+    step = int(spec.get("step", 3))
+    with tempfile.TemporaryDirectory() as tmp:
+        mgr = CheckpointManager(Path(tmp))
+        mgr.save(step, state)
+        template = jax.eval_shape(
+            lambda: init_train_state(jax.random.PRNGKey(seed), cfg, oc,
+                                     DEFAULT_TUNABLES))
+        mesh = make_host_mesh()
+        axes = rules.state_axes_tree(template)
+        restored, meta = elastic_restore(mgr, template, mesh, axes)
+        rules.set_mesh(None)
+    src = jax.tree_util.tree_leaves(state)
+    dst = jax.tree_util.tree_leaves(restored)
+    bitwise = len(src) == len(dst) and all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(src, dst))
+    return {"step": int(meta["step"]), "bitwise": bool(bitwise),
+            "leaves": len(dst), "sharded": hasattr(dst[0], "sharding")}
+
+
+_KINDS = {"session": _run_session_scenario,
+          "elastic": _run_elastic_scenario}
+
+
+# ---------------------------------------------------------------------------
+# gates
+# ---------------------------------------------------------------------------
+
+
+def _eval_gates(name: str, spec: dict, metrics: dict, *,
+                seed: int, impl: str) -> dict:
+    gates = {}
+
+    def gate(key, ok, value, want):
+        gates[key] = {"pass": bool(ok), "value": value, "want": want}
+
+    g = spec.get("gates", {})
+    if "min_recovery_ratio" in g:
+        want = float(g["min_recovery_ratio"])
+        ratio = metrics.get("recovery_ratio")
+        gate("min_recovery_ratio",
+             ratio is not None and ratio >= want and metrics["recovered"],
+             ratio, want)
+    if g.get("require_events"):
+        have = set(metrics.get("events", {}))
+        want = list(g["require_events"])
+        gate("require_events", set(want) <= have, sorted(have), want)
+    if "min_retunes" in g:
+        gate("min_retunes", metrics.get("retunes", 0) >= g["min_retunes"],
+             metrics.get("retunes", 0), g["min_retunes"])
+    if "min_searches" in g:
+        gate("min_searches", metrics.get("searches", 0) >= g["min_searches"],
+             metrics.get("searches", 0), g["min_searches"])
+    if "min_known_workloads" in g:
+        gate("min_known_workloads",
+             metrics.get("known_workloads", 0) >= g["min_known_workloads"],
+             metrics.get("known_workloads", 0), g["min_known_workloads"])
+    if g.get("winner_matches_clean"):
+        clean_spec = {k: v for k, v in spec.items()
+                      if k not in ("faults", "resilient", "gates")}
+        clean = _run_session_scenario(clean_spec, seed=seed, impl=impl)
+        gate("winner_matches_clean",
+             metrics["final_tunables"] == clean["final_tunables"],
+             metrics["final_tunables"], clean["final_tunables"])
+    if "knob_pinned" in g:
+        knob, want = g["knob_pinned"]["knob"], g["knob_pinned"]["value"]
+        have = metrics.get("applied_tunables", {}).get(knob)
+        gate("knob_pinned", have == want, have, want)
+    if g.get("bitwise"):
+        gate("bitwise", metrics.get("bitwise"), metrics.get("bitwise"), True)
+    return gates
+
+
+# ---------------------------------------------------------------------------
+# the sweep
+# ---------------------------------------------------------------------------
+
+
+def run_scenario(name: str, spec: dict, *, seed: int = 0,
+                 impl: str = "auto") -> dict:
+    """One (scenario, seed, impl) cell -> a schema-versioned artifact dict."""
+    kind = spec.get("kind", "session")
+    runner = _KINDS.get(kind)
+    if runner is None:
+        raise ValueError(f"unknown scenario kind {kind!r} for {name!r}; "
+                         f"choose from {sorted(_KINDS)}")
+    t0 = time.perf_counter()
+    metrics = runner(spec, seed=seed, impl=impl)
+    gates = _eval_gates(name, spec, metrics, seed=seed, impl=impl)
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "scenario": name,
+        "seed": seed,
+        "impl": impl,
+        "spec": spec,
+        "metrics": metrics,
+        "gates": gates,
+        "ok": all(v["pass"] for v in gates.values()),
+        "seconds": round(time.perf_counter() - t0, 3),
+    }
+
+
+def _default_run_id(manifest: dict) -> str:
+    spec_hash = hashlib.sha1(
+        json.dumps(manifest, sort_keys=True).encode()).hexdigest()[:8]
+    return time.strftime("%Y%m%d-%H%M%S") + "-" + spec_hash
+
+
+def run_manifest(manifest=None, *, out_dir="results",
+                 run_id: Optional[str] = None, only=None, smoke: bool = False,
+                 seeds=None, impls=None, verbose: bool = False) -> dict:
+    """Sweep the manifest; write per-run artifacts + summary index under
+    ``<out_dir>/<RUN_ID>/`` and return the summary dict.
+
+    ``smoke`` restricts to the manifest's declared smoke subset (the CI
+    shape); ``only`` filters scenario names; ``seeds``/``impls`` override
+    the manifest-level sweeps.
+    """
+    man = manifest if isinstance(manifest, dict) else load_manifest(manifest)
+    names = list(man["scenarios"])
+    if smoke:
+        sm = man.get("smoke", {})
+        names = [n for n in sm.get("scenarios", names) if n in names]
+        seeds = seeds if seeds is not None else sm.get("seeds")
+    if only:
+        keep = set(only)
+        names = [n for n in names if n in keep]
+    seeds = list(seeds if seeds is not None else man.get("seeds", [0]))
+    impls = list(impls if impls is not None else man.get("impls", ["auto"]))
+
+    run_id = run_id or _default_run_id(man)
+    run_dir = Path(out_dir) / run_id
+    run_dir.mkdir(parents=True, exist_ok=True)
+
+    runs = []
+    for name in names:
+        spec = man["scenarios"][name]
+        for seed in seeds:
+            for impl in spec.get("impls", impls):
+                art = run_scenario(name, spec, seed=seed, impl=impl)
+                art["run_id"] = run_id
+                fname = f"{name}--seed{seed}--{impl}.json"
+                (run_dir / fname).write_text(json.dumps(art, indent=2))
+                if verbose:
+                    print(f"  {name:24s} seed={seed} impl={impl:6s} "
+                          f"{'ok' if art['ok'] else 'FAIL'} "
+                          f"({art['seconds']:.1f}s)")
+                runs.append({
+                    "scenario": name, "seed": seed, "impl": impl,
+                    "artifact": fname, "ok": art["ok"],
+                    "gates": {k: v["pass"] for k, v in art["gates"].items()},
+                    "recovery_ratio": art["metrics"].get("recovery_ratio"),
+                })
+    summary = {
+        "schema_version": SCHEMA_VERSION,
+        "run_id": run_id,
+        "scenarios": names,
+        "seeds": seeds,
+        "impls": impls,
+        "smoke": bool(smoke),
+        "runs": runs,
+        "all_ok": all(r["ok"] for r in runs),
+    }
+    (run_dir / "summary.json").write_text(json.dumps(summary, indent=2))
+    (Path(out_dir) / "LATEST").write_text(run_id + "\n")
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--manifest", default=None,
+                    help="manifest path (default: bundled manifest.json)")
+    ap.add_argument("--out", default="results", help="artifact root")
+    ap.add_argument("--run-id", default=None)
+    ap.add_argument("--only", action="append", default=None,
+                    help="restrict to this scenario (repeatable)")
+    ap.add_argument("--seed", action="append", type=int, default=None,
+                    dest="seeds", help="override manifest seeds (repeatable)")
+    ap.add_argument("--impl", action="append", default=None, dest="impls",
+                    help="override manifest impls (repeatable)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="manifest's smoke subset (the CI shape)")
+    args = ap.parse_args(argv)
+    summary = run_manifest(args.manifest, out_dir=args.out,
+                           run_id=args.run_id, only=args.only,
+                           smoke=args.smoke, seeds=args.seeds,
+                           impls=args.impls, verbose=True)
+    print(f"run {summary['run_id']}: {len(summary['runs'])} runs, "
+          f"all_ok={summary['all_ok']}")
+    return 0 if summary["all_ok"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,170 @@
+"""runtime/fault.py substrate: FailureInjector determinism + replay journal,
+StragglerDetector spike/sustained rules + bounded retention, elastic_restore
+onto a genuinely shrunk mesh."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault import (FailureInjector, SimulatedNodeFailure,
+                                 StragglerDetector)
+
+
+def _fired_steps(inj: FailureInjector, n_steps: int) -> list:
+    out = []
+    for step in range(n_steps):
+        try:
+            inj.check(step)
+        except SimulatedNodeFailure:
+            out.append(step)
+    return out
+
+
+class TestFailureInjector:
+    def test_scheduled_fires_once_and_journals(self):
+        inj = FailureInjector(fail_steps=(3, 7))
+        assert _fired_steps(inj, 10) == [3, 7]
+        assert inj.fired == (3, 7)
+        assert inj.journal == [{"step": 3, "mode": "scheduled"},
+                               {"step": 7, "mode": "scheduled"}]
+        # already-fired steps do not re-raise on replay
+        assert _fired_steps(inj, 10) == []
+
+    def test_rate_mode_deterministic_across_instances(self):
+        a = _fired_steps(FailureInjector(rate=0.05, seed=11), 400)
+        b = _fired_steps(FailureInjector(rate=0.05, seed=11), 400)
+        assert a == b and len(a) > 0
+        # a different seed draws a different schedule
+        c = _fired_steps(FailureInjector(rate=0.05, seed=12), 400)
+        assert a != c
+
+    def test_rate_mode_one_shot_per_step(self):
+        inj = FailureInjector(rate=1.0, seed=0)
+        assert _fired_steps(inj, 5) == [0, 1, 2, 3, 4]
+        assert _fired_steps(inj, 5) == []          # replay: all already fired
+        assert {e["mode"] for e in inj.journal} == {"rate"}
+
+    def test_reset_restores_fired_set(self):
+        inj = FailureInjector(fail_steps=(2, 6), rate=1.0, seed=0)
+        fired = _fired_steps(inj, 4)               # 0,1,2,3 (rate + sched 2)
+        saved = inj.fired
+        # a restored run passes the saved fired steps: replaying through
+        # them raises nothing, later steps still fire
+        restored = FailureInjector(fail_steps=(2, 6), rate=1.0, seed=0)
+        restored.reset(fired=saved)
+        assert restored.journal == []
+        assert _fired_steps(restored, 8) == [s for s in range(8)
+                                             if s not in saved]
+        assert 6 not in fired and 6 in restored.fired
+
+
+class TestStragglerDetector:
+    def test_spike_on_single_step_stall(self):
+        det = StragglerDetector(window=8, spike_factor=3.0)
+        for i in range(40):
+            assert det.observe(i, 0.10 + 0.001 * (i % 3)) is None
+        ev = det.observe(40, 0.55)
+        assert ev["kind"] == "spike" and ev["step"] == 40
+
+    def test_sustained_shift_fires_welch_not_spike(self):
+        det = StragglerDetector(window=8, spike_factor=3.0)
+        for i in range(40):
+            det.observe(i, 0.10 + 0.001 * (i % 3))
+        # 2x sustained shift: below the 3x-median spike bar, but the Welch
+        # split on the 2*window tail flags it
+        sustained = []
+        for i in range(40, 90):
+            e = det.observe(i, 0.20 + 0.001 * (i % 3))
+            if e:
+                sustained.append(e)
+        kinds = {e["kind"] for e in sustained}
+        assert "sustained" in kinds and "spike" not in kinds
+
+    def test_downward_shift_is_not_a_straggler(self):
+        det = StragglerDetector(window=8)
+        for i in range(40):
+            det.observe(i, 0.20 + 0.001 * (i % 3))
+        for i in range(40, 90):
+            assert det.observe(i, 0.10 + 0.001 * (i % 3)) is None
+
+    def test_no_event_on_steady_trace(self):
+        det = StragglerDetector(window=8)
+        for i in range(200):
+            assert det.observe(i, 0.10 + 0.002 * (i % 5)) is None
+        assert len(det.events) == 0 and det.observed == 200
+
+    def test_retention_bounds_streaming_state(self):
+        det = StragglerDetector(window=4, retention=32)
+        for i in range(10_000):
+            det.observe(i, 0.1)
+        assert len(det.times) == 32
+        assert det.observed == 10_000
+        assert det.times.maxlen == 32 and det.events.maxlen == 32
+
+    def test_retention_must_cover_welch_history(self):
+        with pytest.raises(ValueError):
+            StragglerDetector(window=16, retention=32)
+
+
+_SHRINK_SCRIPT = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+sys.path.insert(0, sys.argv[1])
+import jax
+import numpy as np
+from jax.sharding import Mesh
+assert len(jax.devices()) == 2
+from repro.configs.base import DEFAULT_TUNABLES
+from repro.optim.adamw import OptConfig
+from repro.runtime.checkpoint import CheckpointManager
+from repro.sharding import rules
+from repro.train.step import init_train_state
+from tests.conftest import tiny
+
+cfg = tiny("qwen2-1.5b")
+oc = OptConfig(lr=1e-3, warmup=2)
+state = init_train_state(jax.random.PRNGKey(0), cfg, oc, DEFAULT_TUNABLES)
+template = jax.eval_shape(
+    lambda: init_train_state(jax.random.PRNGKey(0), cfg, oc,
+                             DEFAULT_TUNABLES))
+axes = rules.state_axes_tree(template)
+
+# save under a 2-device mesh with shardings applied
+mesh2 = Mesh(np.asarray(jax.devices()).reshape(2, 1), ("data", "model"))
+rules.set_mesh(mesh2)
+sharded = jax.device_put(state, rules.tree_shardings(axes))
+mgr = CheckpointManager(sys.argv[2])
+mgr.save(5, sharded, {"mesh": "2x1"})
+
+# restore onto a SHRUNK 1-device mesh — the elastic re-mesh path
+from repro.runtime.fault import elastic_restore
+mesh1 = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+restored, meta = elastic_restore(mgr, template, mesh1, axes)
+rules.set_mesh(None)
+assert meta["step"] == 5
+src = jax.tree_util.tree_leaves(state)
+dst = jax.tree_util.tree_leaves(restored)
+assert len(src) == len(dst)
+for a, b in zip(src, dst):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+assert len(dst[0].sharding.device_set) == 1
+print("SHRUNK_RESTORE_OK")
+"""
+
+
+def test_elastic_restore_onto_shrunk_mesh(tmp_path):
+    """A checkpoint saved under a 2-device mesh restores bitwise onto a
+    1-device mesh (subprocess: device count is fixed at jax import)."""
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src") + os.pathsep
+               + str(repo))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SHRINK_SCRIPT, str(repo / "src"),
+         str(tmp_path)],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SHRUNK_RESTORE_OK" in proc.stdout

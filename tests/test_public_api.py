@@ -11,6 +11,7 @@ PUBLIC_API = [
     "AutonomicEvent",
     "BatchExecutor",
     "CallableExecutor",
+    "ChaosExecutor",
     "EVENT_KINDS",
     "EventKind",
     "ExecConfig",
@@ -21,8 +22,14 @@ PUBLIC_API = [
     "KermitSession",
     "KnowledgeConfig",
     "MonitorConfig",
+    "NoiseFault",
     "PlanConfig",
+    "ResilientExecutor",
     "SimulatorExecutor",
+    "StragglerFault",
+    "StuckKnobFault",
+    "TransientFaults",
+    "fault_from_dict",
     "resolve_impl",
 ]
 

@@ -1,0 +1,343 @@
+"""Chaos layer + scenario harness: fault-spec round-trips, ChaosExecutor
+transparency and perturbations, ResilientExecutor parity/degradation, the
+straggler self-healing gate end to end, artifact schema, regression gate."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs.base import DEFAULT_TUNABLES, tunables_to_arrays
+from repro.core.explorer import Explorer
+from repro.core.simulator import inject_feature_shift
+from repro.core.windows import FEATURES
+from repro.kermit import (ChaosExecutor, EventKind, ExecutorObjective,
+                          KermitSession, NoiseFault, ResilientExecutor,
+                          SimulatorExecutor, StragglerFault, StuckKnobFault,
+                          TransientFaults, fault_from_dict)
+from repro.runtime.fault import SimulatedNodeFailure
+from repro.scenarios import SCHEMA_VERSION, load_manifest, run_manifest
+
+SPACE = {"microbatches": [1, 2, 4], "remat": ["dots", "none"],
+         "grad_compression": [False, True]}
+
+
+def _sim(n_windows=2, seed=0):
+    return SimulatorExecutor([("dense_train", n_windows)], window_size=8,
+                             seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# fault specs
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_json_roundtrip():
+    faults = [StragglerFault(at_window=5, factor=2.5),
+              TransientFaults(fail_steps=(1, 4), rate=0.1),
+              NoiseFault(scale=0.2, duration=3),
+              StuckKnobFault(knob="remat", value="full")]
+    for f in faults:
+        d = json.loads(json.dumps(f.to_dict()))
+        g = fault_from_dict(d)
+        assert g == f and g.kind == f.kind
+
+
+def test_fault_from_dict_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        fault_from_dict({"kind": "meteor"})
+
+
+# ---------------------------------------------------------------------------
+# ChaosExecutor
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_no_faults_is_transparent():
+    plain, chaos = _sim(), ChaosExecutor(_sim())
+    cands = [DEFAULT_TUNABLES,
+             DEFAULT_TUNABLES.replace(microbatches=2, remat="none")]
+    assert chaos.measure_batch(cands) == plain.measure_batch(cands)
+    chaos.apply(cands[1])
+    plain.apply(cands[1])
+    assert chaos.measure() == plain.measure()
+    np.testing.assert_array_equal(chaos.samples, plain.samples)
+    assert chaos.drain_fault_events() == []
+
+
+def test_straggler_factor_and_mitigation_all_paths():
+    f = StragglerFault(at_window=0, factor=3.0,
+                       mitigation={"grad_compression": True},
+                       mitigated_factor=1.1)
+    base, chaos = _sim(), ChaosExecutor(_sim(), [f])
+    plain = DEFAULT_TUNABLES
+    mit = DEFAULT_TUNABLES.replace(grad_compression=True)
+    b = base.measure_batch([plain, mit])
+    # batched path
+    c = chaos.measure_batch([plain, mit])
+    assert c[0] == pytest.approx(b[0] * 3.0)
+    assert c[1] == pytest.approx(b[1] * 1.1)
+    # arrays path prices the mitigation per-row
+    ca = chaos.measure_batch_arrays(tunables_to_arrays([plain, mit]))
+    np.testing.assert_allclose(ca, c)
+    # scalar path follows the applied config
+    chaos.apply(mit)
+    assert chaos.measure() == pytest.approx(b[1] * 1.1)
+
+
+def test_straggler_shifts_telemetry_from_at_window():
+    f = StragglerFault(at_window=1)
+    chaos = ChaosExecutor(_sim(n_windows=3), [f], window_size=8)
+    clean = _sim(n_windows=3).samples
+    shifted = chaos.samples
+    st = FEATURES.index("step_time")
+    np.testing.assert_array_equal(shifted[:8], clean[:8])
+    np.testing.assert_allclose(shifted[8:, st], clean[8:, st] + 0.45,
+                               rtol=1e-6)
+
+
+def test_inject_feature_shift_window_span():
+    x = np.zeros((40, len(FEATURES)), np.float32)
+    y = inject_feature_shift(x, 8, 2, {"mfu": 0.5}, duration=2)
+    col = FEATURES.index("mfu")
+    assert y[:16, col].sum() == 0 and y[32:, col].sum() == 0
+    np.testing.assert_allclose(y[16:32, col], 0.5)
+    assert x[16, col] == 0                      # input untouched
+
+
+def test_noise_fault_seeded_and_replayable():
+    a = ChaosExecutor(_sim(), [NoiseFault(scale=0.1)], seed=7)
+    b = ChaosExecutor(_sim(), [NoiseFault(scale=0.1)], seed=7)
+    c = ChaosExecutor(_sim(), [NoiseFault(scale=0.1)], seed=8)
+    cands = [DEFAULT_TUNABLES] * 4
+    ca, cb, cc = (x.measure_batch(cands) for x in (a, b, c))
+    assert ca == cb != cc
+    assert ca != _sim().measure_batch(cands)    # noise actually applied
+
+
+def test_stuck_knob_pins_apply_and_probes():
+    f = StuckKnobFault(knob="microbatches", value=1)
+    chaos = ChaosExecutor(_sim(), [f])
+    want = DEFAULT_TUNABLES.replace(microbatches=4)
+    chaos.apply(want)
+    assert chaos.current.microbatches == 1      # the system ignored the knob
+    # batched probes price the pinned value: mb candidates all cost the same
+    cands = [DEFAULT_TUNABLES.replace(microbatches=m) for m in (1, 2, 4)]
+    costs = chaos.measure_batch(cands)
+    assert len(set(round(c, 12) for c in costs)) == 1
+    arr = chaos.measure_batch_arrays(tunables_to_arrays(cands))
+    assert len(set(np.round(arr, 12))) == 1
+
+
+def test_transient_fault_raises_and_journals():
+    f = TransientFaults(fail_steps=(0,))
+    chaos = ChaosExecutor(_sim(), [f])
+    with pytest.raises(SimulatedNodeFailure):
+        chaos.measure_batch([DEFAULT_TUNABLES])
+    evs = chaos.drain_fault_events()
+    kinds = [(e["kind"], e.get("step")) for e in evs]
+    assert ("transient", None) in kinds         # activation entry
+    assert ("transient", 0) in kinds            # the raise itself
+    # next call is a fresh step: succeeds
+    assert chaos.measure_batch([DEFAULT_TUNABLES])
+
+
+def test_fault_duration_clears_and_journals():
+    f = StragglerFault(at_window=0, duration=2)
+    chaos = ChaosExecutor(_sim(), [f])
+    faulted = chaos.measure_batch([DEFAULT_TUNABLES])[0]
+    chaos.advance(2)
+    clean = chaos.measure_batch([DEFAULT_TUNABLES])[0]
+    assert faulted == pytest.approx(clean * 3.0)
+    evs = chaos.drain_fault_events()
+    assert any(e.get("cleared") for e in evs)
+
+
+# ---------------------------------------------------------------------------
+# ResilientExecutor
+# ---------------------------------------------------------------------------
+
+
+def test_resilient_zero_fault_bit_parity():
+    """Acceptance gate: zero faults -> winner, cost and evaluation count are
+    bit-identical to the unwrapped executor."""
+    results = []
+    for wrap in (False, True):
+        ex = _sim()
+        if wrap:
+            ex = ResilientExecutor(ex, max_retries=3)
+        res = Explorer(SPACE).global_search(ExecutorObjective(ex),
+                                            DEFAULT_TUNABLES)
+        results.append((res.best, res.cost, res.evaluations))
+    assert results[0] == results[1]
+
+
+def test_resilient_retries_through_transients():
+    chaos = ChaosExecutor(_sim(), [TransientFaults(fail_steps=(0, 1))])
+    ex = ResilientExecutor(chaos, max_retries=3)
+    costs = ex.measure_batch([DEFAULT_TUNABLES])   # steps 0,1 fail; 2 lands
+    assert costs == _sim().measure_batch([DEFAULT_TUNABLES])
+    assert ex.retries == 2 and ex.fallbacks == 0
+
+
+def test_resilient_fallback_cost_on_exhaustion():
+    class Dead:
+        current = DEFAULT_TUNABLES
+
+        def apply(self, t):
+            self.current = t
+
+        def measure(self):
+            raise SimulatedNodeFailure("gone")
+    ex = ResilientExecutor(Dead(), max_retries=2)
+    assert ex.measure() == float("inf")
+    assert ex.fallbacks == 1 and ex.retries == 2
+    assert ex.measure_batch is None             # hidden: inner has no batch
+
+
+def test_resilient_batch_degrades_per_candidate():
+    calls = {"n": 0}
+
+    class Flaky:
+        current = DEFAULT_TUNABLES
+
+        def apply(self, t):
+            self.current = t
+
+        def measure(self):
+            return 1.0
+
+        def measure_batch(self, cands):
+            calls["n"] += 1
+            if len(cands) > 1:
+                raise SimulatedNodeFailure("batch too big")
+            return [float(len(cands))]
+    ex = ResilientExecutor(Flaky(), max_retries=1)
+    costs = ex.measure_batch([DEFAULT_TUNABLES] * 3)
+    assert costs == [1.0, 1.0, 1.0]             # degraded to singletons
+    assert ex.fallbacks == 1
+
+
+def test_resilient_transient_rate_completes_with_same_winner():
+    """Acceptance gate: transient failures at rate <= 0.05 behind the
+    resilience layer -> search completes with the clean winner."""
+    clean = Explorer(SPACE).global_search(
+        ExecutorObjective(_sim()), DEFAULT_TUNABLES)
+    chaos = ChaosExecutor(_sim(), [TransientFaults(rate=0.05)], seed=3)
+    ex = ResilientExecutor(chaos, max_retries=3)
+    faulted = Explorer(SPACE).global_search(
+        ExecutorObjective(ex), DEFAULT_TUNABLES)
+    assert faulted.best == clean.best
+    assert faulted.cost == clean.cost
+
+
+# ---------------------------------------------------------------------------
+# the self-healing tentpole, end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_summary(tmp_path_factory):
+    out = tmp_path_factory.mktemp("results")
+    return out, run_manifest(smoke=True, out_dir=out, run_id="testrun")
+
+
+def test_straggler_recovery_gate(smoke_summary):
+    """3x persistent slowdown mid-run -> FAULT event -> autonomous re-plan
+    -> RECOVERY with >= 90% of pre-fault throughput.  Zero human calls: the
+    session only ever sees run()."""
+    out, summary = smoke_summary
+    rec = [r for r in summary["runs"]
+           if r["scenario"] == "straggler_recovery"]
+    assert rec and all(r["ok"] for r in rec)
+    art = json.loads((out / "testrun" / rec[0]["artifact"]).read_text())
+    m = art["metrics"]
+    assert m["events"].get("fault", 0) >= 1
+    assert m["events"].get("recovery", 0) >= 1
+    assert m["recovered"] and m["recovery_ratio"] >= 0.9
+    assert m["retunes"] >= 2
+    # the committed winner actually mitigates the straggler
+    assert m["final_tunables"]["grad_compression"] is True
+
+
+def test_transient_scenario_winner_matches_clean(smoke_summary):
+    _, summary = smoke_summary
+    rec = [r for r in summary["runs"]
+           if r["scenario"] == "transient_failures"]
+    assert rec and all(r["ok"] for r in rec)
+    assert all(r["gates"]["winner_matches_clean"] for r in rec)
+
+
+def test_artifacts_schema_versioned_and_reproducible(smoke_summary):
+    out, summary = smoke_summary
+    run_dir = out / summary["run_id"]
+    arts = sorted(run_dir.glob("*--seed*.json"))
+    assert len(arts) == len(summary["runs"])
+    man = load_manifest()
+    for p in arts:
+        art = json.loads(p.read_text())
+        # schema-versioned and reproducible from the manifest alone:
+        # scenario + seed + impl + the full spec are recorded
+        assert art["schema_version"] == SCHEMA_VERSION
+        assert art["run_id"] == summary["run_id"]
+        assert art["spec"] == man["scenarios"][art["scenario"]]
+        assert {"scenario", "seed", "impl", "metrics", "gates",
+                "ok"} <= set(art)
+    idx = json.loads((run_dir / "summary.json").read_text())
+    assert idx["all_ok"] and idx["run_id"] == summary["run_id"]
+    assert (out / "LATEST").read_text().strip() == summary["run_id"]
+
+
+def test_session_emits_typed_fault_and_recovery_events(smoke_summary):
+    """Subscribe-level check on the manifest's tentpole scenario: FAULT
+    precedes RECOVERY, and the RECOVERY detail carries the gate fields."""
+    spec = load_manifest()["scenarios"]["straggler_recovery"]
+    from repro.kermit import (AnalysisConfig, KermitConfig, KnowledgeConfig,
+                              MonitorConfig, PlanConfig)
+    ws = spec["window_size"]
+    sim = SimulatorExecutor([tuple(s) for s in spec["schedule"]],
+                            window_size=ws, seed=0)
+    chaos = ChaosExecutor(sim, [fault_from_dict(f) for f in spec["faults"]],
+                          seed=0, window_size=ws)
+    cfg = KermitConfig(monitor=MonitorConfig(window_size=ws),
+                       analysis=AnalysisConfig(**spec["analysis"]),
+                       plan=PlanConfig(space=spec["space"]),
+                       knowledge=KnowledgeConfig(**spec["knowledge"]))
+    faults, recoveries = [], []
+    with KermitSession(cfg, executor=ResilientExecutor(chaos)) as s:
+        s.subscribe(EventKind.FAULT, faults.append)
+        s.subscribe(EventKind.RECOVERY, recoveries.append)
+        s.run(chaos.samples)
+        assert s.summary()["pending_fault"] is None   # healed
+    assert faults and recoveries
+    last = recoveries[-1].detail
+    assert last["recovered"] and last["throughput_ratio"] >= 0.9
+    assert {"pre_fault_cost", "post_cost", "fault"} <= set(last)
+
+
+# ---------------------------------------------------------------------------
+# regression gate
+# ---------------------------------------------------------------------------
+
+
+def test_check_regression_compare():
+    import importlib.util
+    from pathlib import Path
+    spec = importlib.util.spec_from_file_location(
+        "check_regression",
+        Path(__file__).resolve().parents[1] / "scripts"
+        / "check_regression.py")
+    cr = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cr)
+    base = {"s--seed0--auto": {"ok": True, "gates": {"g": True},
+                               "recovery_ratio": 0.93}}
+    same = {"s--seed0--auto": {"ok": True, "gates": {"g": True},
+                               "recovery_ratio": 0.90}}
+    assert cr.compare(same, base) == []         # 3% drop < 20%: holds
+    bad_ratio = {"s--seed0--auto": {"ok": True, "gates": {"g": True},
+                                    "recovery_ratio": 0.5}}
+    assert any("recovery_ratio" in p for p in cr.compare(bad_ratio, base))
+    bad_gate = {"s--seed0--auto": {"ok": False, "gates": {"g": False},
+                                   "recovery_ratio": 0.93}}
+    assert any("FAILS" in p for p in cr.compare(bad_gate, base))
+    assert cr.compare({"new--seed0--auto": {"ok": True, "gates": {}}},
+                      {}) == []                 # new scenarios never fail
