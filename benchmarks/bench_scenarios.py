@@ -1,8 +1,8 @@
 """Chaos scenario harness — the self-healing claim, measured.
 
 Runs the ``repro/scenarios/manifest.json`` sweep (``--smoke`` restricts to
-the manifest's smoke subset: straggler recovery + transient failures on one
-seed) and asserts the tentpole gates hold:
+the manifest's smoke subset: straggler recovery + transient failures +
+crash restore on one seed) and asserts the tentpole gates hold:
 
   straggler_recovery   a 3x persistent slowdown injected mid-run surfaces as
                        a FAULT event, the loop re-plans with zero human
@@ -11,6 +11,10 @@ seed) and asserts the tentpole gates hold:
   transient_failures   with SimulatedNodeFailures at rate <= 0.05 behind the
                        resilience layer, the loop completes and commits the
                        same winner as a fault-free run
+  crash_restore        a supervised run killed mid-flight (CrashFault)
+                       restores from its latest crash-consistent checkpoint
+                       and decides bit-identically to an uninterrupted
+                       supervised run (labels, winners, event stream)
   resilient parity     with zero injected faults, ResilientExecutor search
                        results are bit-identical (winner, cost, evaluations)
                        to the unwrapped executor
@@ -68,6 +72,14 @@ def main(smoke: bool = False):
     for r in trans:
         assert r["gates"].get("winner_matches_clean"), (
             f"transient-failure winner diverged from clean run: {r}")
+    crash = [r for r in summary["runs"] if r["scenario"] == "crash_restore"]
+    assert crash, "manifest must include crash_restore"
+    for r in crash:
+        assert r["gates"].get("bitwise_decisions"), (
+            f"kill-and-restore decisions diverged from the uninterrupted "
+            f"run (seed {r['seed']}): {r}")
+        assert r["gates"].get("min_restores"), (
+            f"crash_restore never actually restored (seed {r['seed']}): {r}")
     assert summary["all_ok"], f"scenario gates failed: {summary['runs']}"
 
     parity = _resilient_parity()

@@ -106,6 +106,19 @@ class Explorer:
         # (callers use the ``explorer or Explorer()`` idiom)
         return len(self._memo)
 
+    # -- durable-session state (see KermitSession.checkpoint) ---------------
+
+    def export_memo(self) -> list:
+        """JSON-able snapshot of the memo, LRU order preserved — a restored
+        search reuses the same cached costs (and hence evaluation counts)."""
+        return [[[[name, value] for name, value in key], cost]
+                for key, cost in self._memo.items()]
+
+    def restore_memo(self, entries) -> None:
+        self._memo = OrderedDict(
+            (tuple((name, value) for name, value in key), float(cost))
+            for key, cost in entries)
+
     def _key(self, tun: Tunables):
         return tuple(sorted(tun.as_dict().items()))
 

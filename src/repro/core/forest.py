@@ -9,7 +9,7 @@ The paper selected random forests over SVM/NB/k-NN for workload classification
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 from functools import partial
 
 import jax
@@ -273,3 +273,25 @@ class RandomForest:
 
     def score(self, x, y):
         return float(np.mean(self.predict(x) == np.asarray(y)))
+
+    # -- durable-session state (see KermitSession.checkpoint) ---------------
+
+    def state_dict(self) -> tuple[dict, dict]:
+        """(meta, arrays) of a fitted forest: the frozen config plus the
+        quantile grid and stacked (feat, thr, dist) tree parameters."""
+        if self.params is None:
+            raise ValueError("cannot snapshot an unfitted RandomForest")
+        feat, thr, dist = self.params
+        meta = {"fc": asdict(self.fc)}
+        arrays = {"grid": np.asarray(self.grid), "feat": np.asarray(feat),
+                  "thr": np.asarray(thr), "dist": np.asarray(dist)}
+        return meta, arrays
+
+    @classmethod
+    def from_state(cls, meta: dict, arrays: dict) -> "RandomForest":
+        forest = cls(ForestConfig(**meta["fc"]))
+        forest.grid = jnp.asarray(arrays["grid"])
+        forest.params = (jnp.asarray(arrays["feat"]),
+                         jnp.asarray(arrays["thr"]),
+                         jnp.asarray(arrays["dist"]))
+        return forest

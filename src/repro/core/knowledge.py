@@ -563,13 +563,11 @@ class WorkloadDB:
             return None
         return self.root / "az" / "workloads.json"
 
-    def save(self, path: str | Path | None = None):
-        """Atomically persist all records (to ``root``'s az zone, or an
-        explicit ``path`` for root-less in-memory DBs)."""
-        out_path = self._db_path(path)
-        if out_path is None:
-            return
-        out = {
+    def to_state(self) -> dict:
+        """The current-format (v2) JSON-able snapshot of the whole store —
+        the ``save`` payload, also embedded verbatim in session checkpoints
+        (``KermitSession.checkpoint``)."""
+        return {
             "version": DB_FORMAT_VERSION,
             "next_label": self._next_label,
             "aliases": {str(k): v for k, v in self.aliases.items()},
@@ -580,10 +578,17 @@ class WorkloadDB:
                                   else np.asarray(r.origin_mean).tolist()))
                 for r in self.records.values()],
         }
-        out_path.parent.mkdir(parents=True, exist_ok=True)
-        tmp = out_path.with_suffix(".tmp")
-        tmp.write_text(json.dumps(out))
-        tmp.replace(out_path)
+
+    def save(self, path: str | Path | None = None):
+        """Crash-consistently persist all records (to ``root``'s az zone, or
+        an explicit ``path`` for root-less in-memory DBs): temp file + fsync
+        + atomic rename, so a crash mid-save leaves the previous snapshot
+        intact (at worst plus a stale ``.tmp`` the next save overwrites)."""
+        out_path = self._db_path(path)
+        if out_path is None:
+            return
+        from repro.runtime.checkpoint import atomic_write_text
+        atomic_write_text(out_path, json.dumps(self.to_state()))
 
     def load(self, path: str | Path | None = None) -> bool:
         """Replace this DB's records with the saved state at ``path`` (or
@@ -592,7 +597,12 @@ class WorkloadDB:
         in_path = self._db_path(path)
         if in_path is None or not in_path.exists():
             return False
-        raw = json.loads(in_path.read_text())
+        self.load_state(json.loads(in_path.read_text()))
+        return True
+
+    def load_state(self, raw: dict) -> None:
+        """Replace this DB's records with a ``to_state``-shaped dict (the
+        ``load`` body, exposed for session restore)."""
         self._next_label = raw["next_label"]
         self.aliases = {int(k): int(v)
                         for k, v in raw.get("aliases", {}).items()}
@@ -608,7 +618,6 @@ class WorkloadDB:
             rec = WorkloadRecord(**r)
             self.records[rec.label] = rec
         self._dirty()
-        return True
 
     def _load(self):
         self.load()

@@ -6,7 +6,7 @@ Input is the one-hot label window (optionally with feature context).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import asdict, dataclass
 from functools import partial
 
 import jax
@@ -222,3 +222,27 @@ class WorkloadPredictor:
         xs, ys = _make_dataset(np.asarray(labels, np.int32), self.pc)
         preds = self.predict(xs)
         return {h: float(np.mean(preds[h] == ys[h])) for h in HORIZONS}
+
+    # -- durable-session state (see KermitSession.checkpoint) ---------------
+
+    def state_dict(self) -> tuple[dict, dict]:
+        """(meta, arrays) of a trained predictor: the frozen config plus the
+        parameter pytree flattened to '/'-joined keys (the
+        ``runtime/checkpoint.py`` array-serialization convention)."""
+        if self.params is None:
+            raise ValueError("cannot snapshot an untrained WorkloadPredictor")
+        from repro.runtime.checkpoint import _flatten
+        return {"pc": asdict(self.pc)}, _flatten(self.params)
+
+    @classmethod
+    def from_state(cls, meta: dict, arrays: dict) -> "WorkloadPredictor":
+        pred = cls(PredictorConfig(**meta["pc"]))
+        tree: dict = {}
+        for key, leaf in arrays.items():
+            parts = key.split("/")
+            node = tree
+            for part in parts[:-1]:
+                node = node.setdefault(part, {})
+            node[parts[-1]] = jnp.asarray(leaf)
+        pred.params = tree
+        return pred

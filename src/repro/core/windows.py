@@ -133,6 +133,27 @@ class WindowRing:
             out[k - got:] = self.label[idx]
         return out
 
+    # -- durable-session state (see KermitSession.checkpoint) ---------------
+
+    def export_state(self) -> tuple[dict, dict]:
+        """(meta, arrays) snapshot — raw slots plus the monotone ``total``,
+        so a restored ring resumes at the exact same head position."""
+        meta = {"capacity": self.capacity, "count": self.count,
+                "n_features": int(self.mean.shape[1]), "total": self.total}
+        arrays = {"mean": self.mean.copy(), "var": self.var.copy(),
+                  "label": self.label.copy()}
+        return meta, arrays
+
+    @classmethod
+    def from_state(cls, meta: dict, arrays: dict) -> "WindowRing":
+        ring = cls(int(meta["capacity"]), int(meta["n_features"]),
+                   int(meta["count"]))
+        ring.mean[:] = np.asarray(arrays["mean"], np.float32)
+        ring.var[:] = np.asarray(arrays["var"], np.float32)
+        ring.label[:] = np.asarray(arrays["label"], np.int32)
+        ring.total = int(meta["total"])
+        return ring
+
 
 def make_windows(samples, window_size: int) -> WindowSeries:
     """samples: (N, F) raw telemetry -> floor(N/W) observation windows."""

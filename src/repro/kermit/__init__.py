@@ -16,7 +16,8 @@ This module's ``__all__`` is the API-stability contract, snapshotted by
 ``tests/test_public_api.py`` — additions are fine, removals and renames are
 breaking changes and must go through a deprecation cycle (see docs/api.md).
 """
-from repro.kermit.chaos import (ChaosExecutor, NoiseFault, ResilientExecutor,
+from repro.kermit.chaos import (ChaosExecutor, CrashFault, NoiseFault,
+                                ResilientExecutor, SessionCrash,
                                 StragglerFault, StuckKnobFault,
                                 TransientFaults, fault_from_dict)
 from repro.kermit.config import (AnalysisConfig, ExecConfig, IMPL_CHOICES,
@@ -26,6 +27,7 @@ from repro.kermit.events import EVENT_KINDS, AutonomicEvent, EventKind
 from repro.kermit.executor import (BatchExecutor, CallableExecutor, Executor,
                                    ExecutorObjective, SimulatorExecutor)
 from repro.kermit.session import KermitSession
+from repro.kermit.supervisor import KermitSupervisor
 
 __all__ = [
     "AnalysisConfig",
@@ -33,6 +35,7 @@ __all__ = [
     "BatchExecutor",
     "CallableExecutor",
     "ChaosExecutor",
+    "CrashFault",
     "EVENT_KINDS",
     "EventKind",
     "ExecConfig",
@@ -41,11 +44,13 @@ __all__ = [
     "IMPL_CHOICES",
     "KermitConfig",
     "KermitSession",
+    "KermitSupervisor",
     "KnowledgeConfig",
     "MonitorConfig",
     "NoiseFault",
     "PlanConfig",
     "ResilientExecutor",
+    "SessionCrash",
     "SimulatorExecutor",
     "StragglerFault",
     "StuckKnobFault",

@@ -143,8 +143,31 @@ class StuckKnobFault(FaultSpec):
     expects_recovery = True
 
 
+class SessionCrash(RuntimeError):
+    """The KERMIT manager process died (a ``CrashFault`` fired, or a real
+    exception a supervisor chose to treat as death).  ``window`` is the chaos
+    clock at the time of death — the supervisor disarms crash faults up to it
+    after restore so a deterministic replay does not re-die."""
+
+    def __init__(self, message: str, *, window: Optional[int] = None):
+        super().__init__(message)
+        self.window = window
+
+
+@dataclass
+class CrashFault(FaultSpec):
+    """Manager-side death: once the chaos clock reaches ``at_window`` the
+    next fault sync raises ``SessionCrash`` — the session loop (not the
+    managed system) dies mid-run.  Recovery is the supervisor's job
+    (restore-latest + replay), not the Plan phase's, so
+    ``expects_recovery`` stays False and no telemetry shifts."""
+
+    kind = "crash"
+
+
 _FAULT_KINDS = {cls.kind: cls for cls in
-                (StragglerFault, TransientFaults, NoiseFault, StuckKnobFault)}
+                (StragglerFault, TransientFaults, NoiseFault, StuckKnobFault,
+                 CrashFault)}
 
 
 def fault_from_dict(d: dict) -> FaultSpec:
@@ -229,6 +252,15 @@ class ChaosExecutor:
         for i, f in enumerate(self.faults):
             if not self._active[i] and not self._done[i] \
                     and now >= f.at_window:
+                if isinstance(f, CrashFault):
+                    # mark done *before* raising: the dying process must not
+                    # re-crash while unwinding, and a restored run disarms
+                    # the fault explicitly (its snapshot predates this flag)
+                    self._done[i] = True
+                    self.injected[f.kind] = self.injected.get(f.kind, 0) + 1
+                    raise SessionCrash(
+                        f"injected manager crash at window {now} "
+                        f"(scheduled at {f.at_window})", window=now)
                 self._active[i] = True
                 self.injected[f.kind] = self.injected.get(f.kind, 0) + 1
                 entry = {"kind": f.kind, "window": now,
@@ -269,6 +301,56 @@ class ChaosExecutor:
         out = list(self._journal)
         self._journal.clear()
         return out
+
+    def disarm(self, kind: str, *, up_to: Optional[int] = None) -> int:
+        """Mark pending faults of ``kind`` as already done (not firing).
+        ``up_to`` bounds it to faults scheduled at or before that window —
+        the supervisor disarms ``crash`` faults up to the death window after
+        a restore, since the restored snapshot predates the fault's own
+        done flag and an armed crash would re-fire deterministically."""
+        n = 0
+        for i, f in enumerate(self.faults):
+            if f.kind == kind and not self._done[i] \
+                    and (up_to is None or f.at_window <= up_to):
+                self._active[i] = False
+                self._done[i] = True
+                n += 1
+        return n
+
+    # -- durable-session state (see KermitSession.checkpoint) ---------------
+
+    def export_state(self) -> dict:
+        """JSON-able snapshot of the chaos clock + fault state: activation
+        flags, the undrained journal, the measure-call counter that keys
+        noise/transient draws, and each injector's fired set — everything a
+        replayed run needs to perturb identically."""
+        return {"manual_window": self._manual_window,
+                "active": list(self._active), "done": list(self._done),
+                "measure_calls": self._measure_calls,
+                "injected": dict(self.injected),
+                "journal": [dict(e) for e in self._journal],
+                "current": self.current.as_dict(),
+                "fired": {str(i): list(inj.fired)
+                          for i, inj in self._injectors.items()}}
+
+    def restore_state(self, state: dict) -> None:
+        if len(state["active"]) != len(self.faults):
+            raise ValueError(
+                f"chaos snapshot covers {len(state['active'])} faults but "
+                f"this executor declares {len(self.faults)} — rebuild the "
+                "stack with the fault schedule the snapshot was taken under")
+        self._manual_window = int(state["manual_window"])
+        self._active = [bool(b) for b in state["active"]]
+        self._done = [bool(b) for b in state["done"]]
+        self._measure_calls = int(state["measure_calls"])
+        self.injected = {str(k): int(v) for k, v in state["injected"].items()}
+        self._journal = deque((dict(e) for e in state["journal"]),
+                              maxlen=self._journal.maxlen)
+        self.current = Tunables(**state["current"])
+        for key, fired in state.get("fired", {}).items():
+            inj = self._injectors.get(int(key))
+            if inj is not None:
+                inj.reset(fired=fired)
 
     # -- per-fault perturbations --------------------------------------------
 
@@ -396,8 +478,14 @@ class ResilientExecutor:
     """Bounded retry-with-backoff + timeout fallback around any executor.
 
     ``measure``/``measure_batch`` retry ``max_retries`` times on
-    ``retry_on`` exceptions (sleeping ``backoff_s * 2**attempt`` between
-    attempts); a batch that keeps failing degrades to per-candidate
+    ``retry_on`` exceptions, sleeping an exponential backoff with
+    *deterministic* jitter between attempts: the delay is
+    ``backoff_s * 2**attempt * (1 + jitter * u)`` where ``u`` is drawn from
+    a counter-keyed rng seeded by the fault-spec seed (``seed``, defaulting
+    to the wrapped chaos executor's) — no wall clock, no shared rng state,
+    so an identical run journals an identical retry schedule and a restored
+    run replays it exactly.  Every retry journals its computed ``delay_s``.
+    A batch that keeps failing degrades to per-candidate
     measurement, and candidates that still fail price as ``fallback_cost``
     (infinite by default — they can never win a search), so the MAPE-K loop
     completes and commits a winner instead of crashing mid-plan.  A measure
@@ -415,6 +503,7 @@ class ResilientExecutor:
                  timeout_s: Optional[float] = None,
                  fallback_cost: float = float("inf"),
                  retry_on: tuple = (SimulatedNodeFailure, TimeoutError),
+                 seed: Optional[int] = None, jitter: float = 0.5,
                  max_journal: int = 1024):
         self.inner = inner
         self.max_retries = int(max_retries)
@@ -422,14 +511,46 @@ class ResilientExecutor:
         self.timeout_s = timeout_s
         self.fallback_cost = float(fallback_cost)
         self.retry_on = tuple(retry_on)
+        # jitter derives from the fault-spec seed (the wrapped chaos layer's)
+        # so the whole fault+retry schedule replays from one number
+        self.seed = int(seed if seed is not None
+                        else getattr(inner, "seed", 0))
+        self.jitter = float(jitter)
         self.retries = 0
         self.fallbacks = 0
         self.timeouts = 0
+        self._retry_seq = 0          # retries ever scheduled (monotone)
         self.journal: deque = deque(maxlen=max_journal)
         if not callable(getattr(inner, "measure_batch", None)):
             self.measure_batch = None
         if not callable(getattr(inner, "measure_batch_arrays", None)):
             self.measure_batch_arrays = None
+
+    def _backoff(self, attempt: int) -> float:
+        """The delay before retry ``attempt`` — a pure function of
+        (seed, retry sequence number), never of the wall clock, so the
+        schedule is replay-stable and journals bit-identically."""
+        seq = self._retry_seq
+        self._retry_seq += 1
+        delay = self.backoff_s * (2 ** attempt)
+        if delay and self.jitter:
+            rng = np.random.default_rng((self.seed << 24) ^ seq)
+            delay *= 1.0 + self.jitter * float(rng.random())
+        return delay
+
+    def _sleep_backoff(self, attempt: int, op: str, error) -> None:
+        """Journal one failed attempt and (for non-final ones) sleep the
+        deterministic backoff; the journaled ``seq``/``delay_s`` pair IS the
+        retry schedule — replaying with the same seed reproduces it."""
+        entry = {"kind": "retry", "op": op, "attempt": attempt,
+                 "error": repr(error)}
+        if attempt < self.max_retries:
+            self.retries += 1
+            entry["seq"] = self._retry_seq
+            entry["delay_s"] = self._backoff(attempt)
+        self.journal.append(entry)
+        if entry.get("delay_s"):
+            time.sleep(entry["delay_s"])
 
     def _attempt(self, fn, op: str):
         """Run ``fn`` with the retry/backoff/timeout policy; returns its
@@ -439,15 +560,11 @@ class ResilientExecutor:
             try:
                 out = fn()
             except self.retry_on as e:
-                self.journal.append({"kind": "retry", "op": op,
-                                     "attempt": attempt, "error": repr(e)})
+                self._sleep_backoff(attempt, op, e)
                 if attempt >= self.max_retries:
                     self.fallbacks += 1
                     self.journal.append({"kind": "fallback", "op": op})
                     return None
-                self.retries += 1
-                if self.backoff_s:
-                    time.sleep(self.backoff_s * (2 ** attempt))
                 continue
             dt = time.perf_counter() - t0
             if self.timeout_s is not None and dt > self.timeout_s:
@@ -468,12 +585,23 @@ class ResilientExecutor:
                 return
             except self.retry_on as e:
                 last = e
-                self.retries += 1
-                self.journal.append({"kind": "retry", "op": "apply",
-                                     "attempt": attempt, "error": repr(e)})
-                if self.backoff_s:
-                    time.sleep(self.backoff_s * (2 ** attempt))
+                self._sleep_backoff(attempt, "apply", e)
         raise last
+
+    # -- durable-session state (see KermitSession.checkpoint) ---------------
+
+    def export_state(self) -> dict:
+        return {"retries": self.retries, "fallbacks": self.fallbacks,
+                "timeouts": self.timeouts, "retry_seq": self._retry_seq,
+                "journal": [dict(e) for e in self.journal]}
+
+    def restore_state(self, state: dict) -> None:
+        self.retries = int(state["retries"])
+        self.fallbacks = int(state["fallbacks"])
+        self.timeouts = int(state["timeouts"])
+        self._retry_seq = int(state["retry_seq"])
+        self.journal = deque((dict(e) for e in state["journal"]),
+                             maxlen=self.journal.maxlen)
 
     def measure(self) -> float:
         out = self._attempt(self.inner.measure, "measure")

@@ -124,6 +124,10 @@ class ExecConfig:
     recovery_threshold: float = 0.9  # pre/post-fault throughput ratio above
     #                                  which a RECOVERY event counts as
     #                                  recovered (chaos harness gate)
+    # durability defaults (KermitSupervisor reads these when its own
+    # arguments are omitted — see kermit/supervisor.py):
+    checkpoint_every: int = 8        # windows between supervisor checkpoints
+    max_restores: int = 3            # supervised deaths tolerated per run
 
 
 _SUBTREES = {

@@ -31,6 +31,13 @@ class EventKind(str, Enum):
     RECOVERY = "recovery"        # first re-plan after a persistent fault
     #                              measured the committed config (detail:
     #                              throughput_ratio, recovered)
+    # Durability (session checkpoint/restore + supervisor — see
+    # kermit/supervisor.py and docs/architecture.md "Durable MAPE-K"):
+    CHECKPOINT = "checkpoint"    # session state snapshotted (detail: path,
+    #                              window, version); recorded *before* the
+    #                              write so a snapshot contains its own event
+    RESTORE = "restore"          # session rebuilt from a snapshot (detail:
+    #                              path, window, version)
 
     def __str__(self) -> str:    # json.dumps/logging friendliness
         return self.value

@@ -129,6 +129,23 @@ class MeasureCounters:
         self.measured += n
         self.measured_batches += batch
 
+    # -- durable-session state (see KermitSession.checkpoint) ---------------
+
+    def export_state(self) -> dict:
+        current = getattr(self, "current", None)
+        return {"applied": self.applied, "measured": self.measured,
+                "measured_batches": self.measured_batches,
+                "measure_seconds": self.measure_seconds,
+                "current": current.as_dict() if current is not None else None}
+
+    def restore_state(self, state: dict) -> None:
+        self.applied = int(state["applied"])
+        self.measured = int(state["measured"])
+        self.measured_batches = int(state["measured_batches"])
+        self.measure_seconds = float(state["measure_seconds"])
+        if state.get("current") is not None:
+            self.current = Tunables(**state["current"])
+
     def _measure_batch_impl(self, candidates: Sequence[Tunables],
                             scalar_fn: Callable,
                             arrays_fn: Optional[Callable]) -> list:

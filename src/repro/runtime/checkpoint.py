@@ -10,7 +10,9 @@ resharding is a device_put with the new NamedShardings).
 """
 from __future__ import annotations
 
+import io
 import json
+import os
 import shutil
 from pathlib import Path
 from typing import Optional
@@ -18,6 +20,76 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+# reserved npz key carrying the snapshot's JSON metadata (utf-8 bytes)
+_META_KEY = "__meta__"
+
+
+def atomic_write_bytes(path: str | Path, data: bytes) -> Path:
+    """Crash-consistent file write: temp file + flush + fsync + atomic
+    rename.  A crash at any point leaves either the old file or the new one,
+    never a torn mix — a leftover ``<name>.tmp`` is garbage the next write
+    overwrites, not state anyone reads."""
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+    # fsync the directory so the rename itself survives power loss
+    try:
+        dfd = os.open(path.parent, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:
+        pass                         # not every filesystem supports dir fsync
+    return path
+
+
+def atomic_write_text(path: str | Path, text: str) -> Path:
+    return atomic_write_bytes(path, text.encode("utf-8"))
+
+
+def _json_default(obj):
+    """Coerce stray numpy leaves (event details, journal entries) to plain
+    JSON scalars so ``meta`` never needs pre-sanitising at call sites."""
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    raise TypeError(f"{type(obj).__name__} is not JSON serializable")
+
+
+def save_snapshot(path: str | Path, arrays: dict, meta: dict) -> Path:
+    """Write a single-file snapshot (npz of named arrays + a JSON ``meta``
+    dict under a reserved key) with the atomic temp+fsync+rename protocol.
+    The session-checkpoint layer builds ``arrays`` from flattened pytrees
+    (``_flatten``) so trained model parameters reuse this file format."""
+    buf = io.BytesIO()
+    payload = {k: np.asarray(v) for k, v in arrays.items()}
+    if _META_KEY in payload:
+        raise ValueError(f"array key {_META_KEY!r} is reserved for metadata")
+    payload[_META_KEY] = np.frombuffer(
+        json.dumps(meta, default=_json_default).encode("utf-8"),
+        dtype=np.uint8)
+    np.savez(buf, **payload)
+    return atomic_write_bytes(path, buf.getvalue())
+
+
+def load_snapshot(path: str | Path) -> tuple[dict, dict]:
+    """Read a ``save_snapshot`` file -> (arrays, meta)."""
+    with np.load(Path(path), allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files if k != _META_KEY}
+        meta = json.loads(bytes(z[_META_KEY].tobytes()).decode("utf-8"))
+    return arrays, meta
 
 
 def _flatten(tree) -> dict:

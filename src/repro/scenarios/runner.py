@@ -14,6 +14,11 @@ paper's "without human intervention" claim into pass/fail data:
                         (graceful degradation, not silent corruption)
   knob_pinned           the *applied* config holds the stuck knob's value
   bitwise               elastic restore round-tripped exactly
+  bitwise_decisions     a killed-and-restored supervised run decided
+                        identically to an uninterrupted one (labels,
+                        committed winners, event stream)
+  min_restores          the supervisor actually survived this many deaths
+  min_checkpoints       ... and took this many snapshots doing it
 
 Every run writes ``<scenario>--seed<k>--<impl>.json`` (schema-versioned,
 self-describing: seed + scenario spec + impl recorded) under
@@ -33,10 +38,11 @@ from typing import Optional
 
 import numpy as np
 
-from repro.kermit import (AnalysisConfig, ChaosExecutor, EventKind,
-                          KermitConfig, KermitSession, KnowledgeConfig,
-                          MonitorConfig, PlanConfig, ResilientExecutor,
-                          SimulatorExecutor, fault_from_dict)
+from repro.kermit import (AnalysisConfig, ChaosExecutor, CrashFault,
+                          EventKind, ExecConfig, KermitConfig, KermitSession,
+                          KermitSupervisor, KnowledgeConfig, MonitorConfig,
+                          PlanConfig, ResilientExecutor, SimulatorExecutor,
+                          fault_from_dict)
 
 SCHEMA_VERSION = 1
 DEFAULT_MANIFEST = Path(__file__).with_name("manifest.json")
@@ -52,38 +58,38 @@ def load_manifest(path=None) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def _run_session_scenario(spec: dict, *, seed: int, impl: str) -> dict:
-    """Drive a full MAPE-K session over a simulated stream with faults
-    injected at the Execute boundary; returns the metrics dict."""
+def _build_stack(spec: dict, *, seed: int, extra_faults=()):
+    """The simulator + chaos (+ resilience) executor stack a scenario spec
+    declares; returns (outer executor, the chaos layer).  ``extra_faults``
+    are appended *after* the manifest's — a ``CrashFault`` added last leaves
+    every other fault's index (and hence its seeded draws) unchanged, so a
+    crashing run perturbs identically to a crash-free one."""
     ws = int(spec.get("window_size", 16))
     sim = SimulatorExecutor([tuple(s) for s in spec["schedule"]],
                             window_size=ws, seed=seed,
                             drift=float(spec.get("drift", 0.0)))
     faults = [fault_from_dict(f) for f in spec.get("faults", [])]
+    faults += list(extra_faults)
     chaos = ChaosExecutor(sim, faults, seed=seed, window_size=ws)
     res_cfg = spec.get("resilient")
     ex = ResilientExecutor(chaos, **res_cfg) if res_cfg is not None else chaos
+    return ex, chaos
 
-    cfg = KermitConfig(
+
+def _build_config(spec: dict, impl: str) -> KermitConfig:
+    ws = int(spec.get("window_size", 16))
+    return KermitConfig(
         monitor=MonitorConfig(window_size=ws, **spec.get("monitor", {})),
         analysis=AnalysisConfig(**spec.get("analysis", {})),
         plan=PlanConfig(space=spec.get("space")),
         knowledge=KnowledgeConfig(**spec.get("knowledge", {})),
+        execute=ExecConfig(**spec.get("execute", {})),
         impl=impl)
-    events = []
-    with KermitSession(cfg, executor=ex) as session:
-        session.subscribe(None, events.append)
-        samples = chaos.samples
-        hyb = spec.get("hybrid")
-        if hyb:
-            from repro.core.simulator import generate_hybrid
-            samples = np.concatenate([samples, generate_hybrid(
-                tuple(hyb["names"]), n_windows=int(hyb.get("n_windows", 8)),
-                window_size=ws, seed=seed)])
-        session.run(samples)
-        summary = session.summary()
-        final = session.current.as_dict()
 
+
+def _session_metrics(events, summary: dict, final: dict, chaos,
+                     ex) -> dict:
+    """The common metrics dict every session-driving scenario reports."""
     by_kind = Counter(e.kind for e in events)
     recoveries = [e.detail for e in events
                   if e.kind == EventKind.RECOVERY.value]
@@ -107,6 +113,116 @@ def _run_session_scenario(spec: dict, *, seed: int, impl: str) -> dict:
         "final_tunables": final,
         "applied_tunables": chaos.current.as_dict(),
     }
+
+
+def _run_session_scenario(spec: dict, *, seed: int, impl: str) -> dict:
+    """Drive a full MAPE-K session over a simulated stream with faults
+    injected at the Execute boundary; returns the metrics dict."""
+    ws = int(spec.get("window_size", 16))
+    ex, chaos = _build_stack(spec, seed=seed)
+    cfg = _build_config(spec, impl)
+    events = []
+    with KermitSession(cfg, executor=ex) as session:
+        session.subscribe(None, events.append)
+        samples = chaos.samples
+        hyb = spec.get("hybrid")
+        if hyb:
+            from repro.core.simulator import generate_hybrid
+            samples = np.concatenate([samples, generate_hybrid(
+                tuple(hyb["names"]), n_windows=int(hyb.get("n_windows", 8)),
+                window_size=ws, seed=seed)])
+        session.run(samples)
+        summary = session.summary()
+        final = session.current.as_dict()
+    return _session_metrics(events, summary, final, chaos, ex)
+
+
+def _decisions(session) -> dict:
+    """Everything the loop *decided*, in order — the kill-and-restore gate
+    compares this between a crashed-and-restored run and an uninterrupted
+    one.  RESTORE events are the recovery mechanism's own trace, not a
+    decision, and are excluded."""
+    events = [e for e in session.events
+              if e.kind != EventKind.RESTORE.value]
+    return {
+        "events": [(e.window_id, e.kind) for e in events],
+        "labels": [(e.window_id, e.label) for e in events],
+        "winners": [e.tunables for e in events
+                    if e.kind == EventKind.RETUNE.value],
+        "final_tunables": session.current.as_dict(),
+    }
+
+
+def _run_crash_restore_scenario(spec: dict, *, seed: int, impl: str) -> dict:
+    """Kill-and-restore determinism: the same supervised run twice — once
+    uninterrupted, once with injected manager crashes (``CrashFault``) that
+    the ``KermitSupervisor`` survives by restoring the latest checkpoint —
+    gated on bit-identical decisions between the two."""
+    import tempfile
+
+    cfg = _build_config(spec, impl)
+    crash_windows = [int(w) for w in spec.get("crash_at_windows", [])]
+
+    def factory(crashes):
+        def build():
+            extra = [CrashFault(at_window=w) for w in crashes]
+            ex, _ = _build_stack(spec, seed=seed, extra_faults=extra)
+            return ex
+        return build
+
+    with tempfile.TemporaryDirectory() as tmp:
+        clean = KermitSupervisor(cfg, factory([]),
+                                 checkpoint_path=Path(tmp) / "clean.npz")
+        clean.run()
+        crashed = KermitSupervisor(cfg, factory(crash_windows),
+                                   checkpoint_path=Path(tmp) / "crash.npz")
+        report = crashed.run()
+
+    session, ex = crashed.session, crashed.session.executor
+    chaos = ex
+    while chaos is not None and not isinstance(chaos, ChaosExecutor):
+        chaos = chaos.__dict__.get("inner")
+    metrics = _session_metrics(list(session.events), session.summary(),
+                               session.current.as_dict(), chaos, ex)
+    metrics.update({
+        "restores": report["restores"],
+        "checkpoints": report["checkpoints"],
+        "crashes": report["crashes"],
+        "decisions_match": _decisions(session) == _decisions(clean.session),
+    })
+    return metrics
+
+
+def _run_elastic_session_scenario(spec: dict, *, seed: int,
+                                  impl: str) -> dict:
+    """Mid-session elastic shrink: run to ``shrink_at_window``, checkpoint,
+    tear the whole stack down, rebuild it (the post-shrink cluster — the
+    manifest's straggler fault activates from the shrink window, pricing
+    the lost capacity), restore and finish.  Metrics come from the restored
+    session, whose replayed event stream spans both phases."""
+    import tempfile
+
+    ws = int(spec.get("window_size", 16))
+    cfg = _build_config(spec, impl)
+    shrink_w = int(spec.get("shrink_at_window", 16))
+    ex1, chaos1 = _build_stack(spec, seed=seed)
+    samples = chaos1.samples
+    cut = shrink_w * ws
+
+    with tempfile.TemporaryDirectory() as tmp:
+        snap = Path(tmp) / "shrink.npz"
+        with KermitSession(cfg, executor=ex1) as s1:
+            s1.step_batch(samples[:cut])
+            s1.checkpoint(snap)
+        ex2, chaos2 = _build_stack(spec, seed=seed)
+        with KermitSession.restore(snap, executor=ex2) as s2:
+            s2.step_batch(samples[cut:])
+            summary = s2.summary()
+            final = s2.current.as_dict()
+            metrics = _session_metrics(list(s2.events), summary, final,
+                                       chaos2, ex2)
+    metrics["shrink_window"] = shrink_w
+    return metrics
 
 
 def _run_elastic_scenario(spec: dict, *, seed: int, impl: str) -> dict:
@@ -158,7 +274,9 @@ def _run_elastic_scenario(spec: dict, *, seed: int, impl: str) -> dict:
 
 
 _KINDS = {"session": _run_session_scenario,
-          "elastic": _run_elastic_scenario}
+          "elastic": _run_elastic_scenario,
+          "crash": _run_crash_restore_scenario,
+          "elastic_session": _run_elastic_session_scenario}
 
 
 # ---------------------------------------------------------------------------
@@ -207,6 +325,17 @@ def _eval_gates(name: str, spec: dict, metrics: dict, *,
         gate("knob_pinned", have == want, have, want)
     if g.get("bitwise"):
         gate("bitwise", metrics.get("bitwise"), metrics.get("bitwise"), True)
+    if g.get("bitwise_decisions"):
+        gate("bitwise_decisions", metrics.get("decisions_match"),
+             metrics.get("decisions_match"), True)
+    if "min_restores" in g:
+        gate("min_restores",
+             metrics.get("restores", 0) >= g["min_restores"],
+             metrics.get("restores", 0), g["min_restores"])
+    if "min_checkpoints" in g:
+        gate("min_checkpoints",
+             metrics.get("checkpoints", 0) >= g["min_checkpoints"],
+             metrics.get("checkpoints", 0), g["min_checkpoints"])
     return gates
 
 

@@ -12,6 +12,7 @@ PUBLIC_API = [
     "BatchExecutor",
     "CallableExecutor",
     "ChaosExecutor",
+    "CrashFault",
     "EVENT_KINDS",
     "EventKind",
     "ExecConfig",
@@ -20,11 +21,13 @@ PUBLIC_API = [
     "IMPL_CHOICES",
     "KermitConfig",
     "KermitSession",
+    "KermitSupervisor",
     "KnowledgeConfig",
     "MonitorConfig",
     "NoiseFault",
     "PlanConfig",
     "ResilientExecutor",
+    "SessionCrash",
     "SimulatorExecutor",
     "StragglerFault",
     "StuckKnobFault",
@@ -47,8 +50,10 @@ def test_session_surface():
     """The methods examples/docs rely on exist with stable names."""
     for method in ("step", "step_batch", "run", "subscribe", "bind_executor",
                    "invalidate", "save_knowledge", "summary", "close",
-                   "__enter__", "__exit__"):
+                   "checkpoint", "restore", "__enter__", "__exit__"):
         assert callable(getattr(kermit.KermitSession, method)), method
+    for method in ("run",):
+        assert callable(getattr(kermit.KermitSupervisor, method)), method
 
 
 def test_executor_protocol_shape():

@@ -10,10 +10,11 @@ from repro.configs.base import DEFAULT_TUNABLES, tunables_to_arrays
 from repro.core.explorer import Explorer
 from repro.core.simulator import inject_feature_shift
 from repro.core.windows import FEATURES
-from repro.kermit import (ChaosExecutor, EventKind, ExecutorObjective,
-                          KermitSession, NoiseFault, ResilientExecutor,
-                          SimulatorExecutor, StragglerFault, StuckKnobFault,
-                          TransientFaults, fault_from_dict)
+from repro.kermit import (ChaosExecutor, CrashFault, EventKind,
+                          ExecutorObjective, KermitSession, KermitSupervisor,
+                          NoiseFault, ResilientExecutor, SimulatorExecutor,
+                          StragglerFault, StuckKnobFault, TransientFaults,
+                          fault_from_dict)
 from repro.runtime.fault import SimulatedNodeFailure
 from repro.scenarios import SCHEMA_VERSION, load_manifest, run_manifest
 
@@ -35,7 +36,8 @@ def test_fault_spec_json_roundtrip():
     faults = [StragglerFault(at_window=5, factor=2.5),
               TransientFaults(fail_steps=(1, 4), rate=0.1),
               NoiseFault(scale=0.2, duration=3),
-              StuckKnobFault(knob="remat", value="full")]
+              StuckKnobFault(knob="remat", value="full"),
+              CrashFault(at_window=7)]
     for f in faults:
         d = json.loads(json.dumps(f.to_dict()))
         g = fault_from_dict(d)
@@ -265,6 +267,71 @@ def test_transient_scenario_winner_matches_clean(smoke_summary):
            if r["scenario"] == "transient_failures"]
     assert rec and all(r["ok"] for r in rec)
     assert all(r["gates"]["winner_matches_clean"] for r in rec)
+
+
+def test_crash_restore_smoke_gate(smoke_summary):
+    """The smoke set exercises durability end to end: an injected manager
+    crash, a supervised restore from the latest checkpoint, and decisions
+    bit-identical to the uninterrupted supervised run."""
+    out, summary = smoke_summary
+    rec = [r for r in summary["runs"] if r["scenario"] == "crash_restore"]
+    assert rec and all(r["ok"] for r in rec)
+    assert all(r["gates"]["bitwise_decisions"] for r in rec)
+    art = json.loads((out / "testrun" / rec[0]["artifact"]).read_text())
+    m = art["metrics"]
+    assert m["crashes"] >= 1 and m["restores"] >= 1
+    assert m["checkpoints"] >= art["spec"]["gates"]["min_checkpoints"]
+    assert m["decisions_match"] is True
+    assert m["events"].get("checkpoint", 0) >= 1
+    assert m["events"].get("restore", 0) >= 1
+    # the restored loop still self-heals the straggler, zero human calls
+    assert m["recovered"] and m["recovery_ratio"] >= 0.9
+
+
+def test_supervisor_kill_and_restore_bit_identical(tmp_path):
+    """Direct (manifest-free) kill-and-restore gate: a run killed by a
+    CrashFault and resumed from its latest snapshot commits the same
+    winners, logs the same labels, and emits the same event stream as a
+    run that never died."""
+    from repro.kermit import (AnalysisConfig, ExecConfig, KermitConfig,
+                              KnowledgeConfig, MonitorConfig, PlanConfig)
+
+    def factory(crash):
+        def build():
+            sim = SimulatorExecutor([("dense_train", 24)], window_size=8,
+                                    seed=0)
+            faults = [StragglerFault(at_window=14, factor=3.0)]
+            if crash:
+                # appended last: other faults keep their indices and seeds
+                faults.append(CrashFault(at_window=17))
+            return ResilientExecutor(
+                ChaosExecutor(sim, faults, seed=0, window_size=8),
+                max_retries=2)
+        return build
+
+    cfg = KermitConfig(monitor=MonitorConfig(window_size=8),
+                       analysis=AnalysisConfig(interval=8, min_windows=6),
+                       plan=PlanConfig(space=SPACE),
+                       knowledge=KnowledgeConfig(drift_eps=0.45),
+                       execute=ExecConfig(checkpoint_every=4))
+    clean = KermitSupervisor(cfg, factory(False),
+                             checkpoint_path=tmp_path / "clean.npz")
+    clean_report = clean.run()
+    crashed = KermitSupervisor(cfg, factory(True),
+                               checkpoint_path=tmp_path / "crash.npz")
+    report = crashed.run()
+    assert report["crashes"] == 1 and report["restores"] == 1
+    assert report["windows"] == clean_report["windows"] == 24
+    assert report["checkpoints"] == clean_report["checkpoints"]
+
+    def decisions(s):
+        evs = [e for e in s.events if e.kind != EventKind.RESTORE.value]
+        return ([(e.window_id, e.kind, e.label) for e in evs],
+                [e.tunables for e in evs
+                 if e.kind == EventKind.RETUNE.value],
+                s.current.as_dict())
+
+    assert decisions(crashed.session) == decisions(clean.session)
 
 
 def test_artifacts_schema_versioned_and_reproducible(smoke_summary):
