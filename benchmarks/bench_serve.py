@@ -1,0 +1,140 @@
+"""Autonomic serving — the MAPE-K loop closed around the real inference stack.
+
+Two claims, measured:
+
+  engine reuse     the serving launcher holds params + jitted prefill/decode
+                   steps in a process-wide ``ServeEngine``: a repeat
+                   ``serve_batch`` call compiles nothing new (build counters
+                   stay flat) instead of re-initializing per call
+  autonomic gate   a ``KermitSession`` driving a ``ServeExecutor`` under
+                   drifting diurnal traffic detects the phase change from
+                   telemetry alone, re-plans with zero human calls, does not
+                   regress p99, and commits a config whose tokens/s is
+                   >= 90% of the best config found by exhaustive probing
+
+The returned dict feeds ``BENCH_serve.json``; ``--smoke`` shrinks the trace
+(12 night + 12 day windows instead of 16 + 16) for CI.
+"""
+import itertools
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+
+def _engine_reuse() -> dict:
+    """Satellite check: launch/serve.py routes through one shared engine."""
+    from repro.configs.base import DEFAULT_TUNABLES
+    from repro.kermit.serving import get_engine, tiny_config
+    from repro.launch.serve import serve_batch
+
+    cfg = tiny_config("qwen2-1.5b")
+    t0 = time.perf_counter()
+    serve_batch(cfg, 2, 16, 4, DEFAULT_TUNABLES)
+    first_s = time.perf_counter() - t0
+    eng = get_engine(cfg, 0)
+    builds = (eng.stats["prefill_builds"], eng.stats["decode_builds"])
+    t0 = time.perf_counter()
+    res = serve_batch(cfg, 2, 16, 4, DEFAULT_TUNABLES)
+    repeat_s = time.perf_counter() - t0
+    after = (eng.stats["prefill_builds"], eng.stats["decode_builds"])
+    assert after == builds, (
+        f"repeat serve_batch recompiled: builds {builds} -> {after}")
+    assert len(res["generated"]) == 2
+    row("serve_engine_reuse", f"{repeat_s * 1e3:.1f}ms",
+        f"first={first_s * 1e3:.0f}ms builds={builds}")
+    return {"first_s": first_s, "repeat_s": repeat_s,
+            "prefill_builds": builds[0], "decode_builds": builds[1]}
+
+
+def _closed_loop(smoke: bool) -> dict:
+    """Tentpole gate: autonomous re-plan on traffic phase change, p99 held,
+    committed winner within 10% of the exhaustive-best tokens/s."""
+    from repro.configs.base import Tunables
+    from repro.kermit import (AnalysisConfig, KermitConfig, KermitSession,
+                              KnowledgeConfig, MonitorConfig, PlanConfig)
+    from repro.kermit.serving import (ServeConfig, ServeEngine, ServeExecutor,
+                                      TrafficGenerator, run_serving_session,
+                                      tiny_config)
+
+    night = day = 12 if smoke else 16
+    space = {"serve_batch": [2, 4, 8], "cache_len": [64]}
+    initial = Tunables(serve_batch=8, cache_len=64)
+    engine = ServeEngine(tiny_config("qwen2-1.5b"), seed=0, initial=initial)
+    traffic = TrafficGenerator.diurnal(window_size=8, seed=0,
+                                       night_windows=night, day_windows=day)
+    # best-of-3 probes: the day-phase cost gap between serve_batch 4 and 8
+    # is ~6 sigma at k=3 but can flip under CPU jitter at k<=2
+    ex = ServeExecutor(engine, traffic, config=ServeConfig(probe_repeats=3),
+                       initial=initial)
+    cfg = KermitConfig(
+        monitor=MonitorConfig(window_size=8),
+        analysis=AnalysisConfig(interval=6, min_windows=6),
+        knowledge=KnowledgeConfig(drift_eps=0.45),
+        plan=PlanConfig(space=space, default_tunables=initial.as_dict()))
+    events = []
+    with KermitSession(cfg, executor=ex) as session:
+        session.subscribe(None, events.append)
+        final = run_serving_session(session, ex)
+
+    wl = ex.window_log
+    change_w = traffic.phase_boundaries()[0]
+    changes = [wl[i]["window"] for i in range(1, len(wl))
+               if wl[i]["tunables"] != wl[i - 1]["tunables"]]
+    replans = [w for w in changes if w >= change_w]
+    kinds = {e.kind for e in events}
+    assert replans, (
+        f"no autonomous re-plan after the traffic phase change at window "
+        f"{change_w}: config changes at {changes}, events {sorted(kinds)}")
+    w0 = replans[0]
+    p99_before = float(np.median(
+        [w["p99"] for w in wl if change_w <= w["window"] < w0]))
+    p99_after = float(np.median(
+        [w["p99"] for w in wl if w["window"] >= w0]))
+    assert p99_after <= p99_before, (
+        f"re-plan regressed p99: {p99_before:.4f} -> {p99_after:.4f}")
+
+    # committed winner vs the exhaustive-best config, by tokens/s on the
+    # final (day) probe window; best-of-3 replays tame CPU timing jitter
+    keys = sorted(space)
+    combos = [dict(zip(keys, vals))
+              for vals in itertools.product(*(space[k] for k in keys))]
+    best_tun, best_tok = None, -1.0
+    for combo in combos:
+        tok = ex.probe_stats(final.replace(**combo), repeats=3)["tokens_per_s"]
+        if tok > best_tok:
+            best_tun, best_tok = final.replace(**combo), tok
+    if best_tun == final:
+        ratio = 1.0            # committed config IS the exhaustive winner
+    else:
+        ratio = ex.probe_stats(final, repeats=3)["tokens_per_s"] / best_tok
+    assert ratio >= 0.9, (
+        f"committed {final.as_dict()} reaches only {ratio:.2f} of the "
+        f"exhaustive winner {best_tun.as_dict()} ({best_tok:.0f} tok/s)")
+
+    row("serve_replans_after_change", len(replans), f"first at window {w0}")
+    row("serve_p99_ratio", f"{p99_after / p99_before:.3f}",
+        f"{p99_before:.4f}s -> {p99_after:.4f}s")
+    row("serve_exhaustive_ratio", f"{ratio:.3f}",
+        f"committed serve_batch={final.serve_batch}")
+    row("serve_engine_builds", engine.stats["decode_builds"],
+        f"prefill={engine.stats['prefill_builds']} "
+        f"calls={engine.stats['serve_calls']}")
+    return {"windows": len(wl), "replans_after_change": len(replans),
+            "first_replan_window": w0, "p99_before": p99_before,
+            "p99_after": p99_after, "p99_ratio": p99_after / p99_before,
+            "exhaustive_ratio": ratio, "committed": final.as_dict(),
+            "decode_builds": engine.stats["decode_builds"],
+            "events": sorted(kinds)}
+
+
+def main(smoke: bool = False):
+    reuse = _engine_reuse()
+    loop = _closed_loop(smoke)
+    row("serve_all_ok", True, f"smoke={smoke}")
+    return {"engine_reuse": reuse, "closed_loop": loop, "smoke": smoke}
+
+
+if __name__ == "__main__":
+    main(smoke=True)

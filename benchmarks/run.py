@@ -39,7 +39,7 @@ def main(argv=None) -> None:
                             bench_clustering, bench_explorer, bench_kernels,
                             bench_knowledge, bench_monitor_throughput,
                             bench_predictor, bench_roofline, bench_scenarios,
-                            bench_transition, bench_zsl)
+                            bench_serve, bench_transition, bench_zsl)
     suites = [
         ("change_detector[fig9]", bench_change_detector),
         ("classifiers[fig6]", bench_classifiers),
@@ -55,6 +55,7 @@ def main(argv=None) -> None:
         ("monitor_throughput[perf]", bench_monitor_throughput),
         ("autonomic_e2e", bench_autonomic_e2e),
         ("scenarios[self-healing]", bench_scenarios),
+        ("serving[autonomic serving gate]", bench_serve),
     ]
     only = [s.strip() for s in args.only.split(",") if s.strip()]
     if only:

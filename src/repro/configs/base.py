@@ -177,6 +177,11 @@ class Tunables:
     attn_unroll: bool = False         # unroll q-chunk loop (cost probes)
     layer_unroll: bool = False        # unroll layer scans (cost probes)
     zero3: bool = True                # shard params over 'data' too (FSDP)
+    # -- serving knobs (kermit/serving; ignored by the training path) -------
+    serve_batch: int = 8              # decode batch size (requests per call)
+    prefill_chunk: int = 0            # prefill q-chunk override; 0 = inherit
+    cache_len: int = 0                # KV capacity rounding multiple; 0 = exact
+    cache_dtype: str = "auto"         # KV storage dtype; auto = model dtype
 
     def replace(self, **kw) -> "Tunables":
         return dataclasses.replace(self, **kw)
@@ -211,6 +216,7 @@ TUNABLE_CATEGORIES = {
     "remat": ("none", "dots", "full"),
     "accum_dtype": ("float32", "bfloat16"),
     "attn_impl": ("auto", "xla", "pallas"),
+    "cache_dtype": ("auto", "float32", "bfloat16"),
 }
 
 

@@ -27,6 +27,9 @@ from repro.kermit.events import EVENT_KINDS, AutonomicEvent, EventKind
 from repro.kermit.executor import (BatchExecutor, CallableExecutor, Executor,
                                    ExecutorObjective, SimulatorExecutor)
 from repro.kermit.session import KermitSession
+from repro.kermit.serving import (SERVE_SPACE, ServeConfig, ServeEngine,
+                                  ServeExecutor, TrafficGenerator,
+                                  TrafficPhase, run_serving_session)
 from repro.kermit.supervisor import KermitSupervisor
 
 __all__ = [
@@ -50,11 +53,18 @@ __all__ = [
     "NoiseFault",
     "PlanConfig",
     "ResilientExecutor",
+    "SERVE_SPACE",
+    "ServeConfig",
+    "ServeEngine",
+    "ServeExecutor",
     "SessionCrash",
     "SimulatorExecutor",
     "StragglerFault",
     "StuckKnobFault",
+    "TrafficGenerator",
+    "TrafficPhase",
     "TransientFaults",
     "fault_from_dict",
     "resolve_impl",
+    "run_serving_session",
 ]

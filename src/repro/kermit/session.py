@@ -259,6 +259,18 @@ class KermitSession:
                     "provides no telemetry stream")
         return self.step_batch(samples)
 
+    def run_live(self, stream) -> Tunables:
+        """Drive the loop over a *live* window stream — an iterable yielding
+        (N, F) sample arrays produced under the currently-applied
+        configuration (e.g. ``ServeExecutor.telemetry_stream()``).  Unlike
+        ``run``, the stream is pulled one batch at a time, so a retune
+        committed mid-stream changes how every later batch is generated —
+        the closed-loop shape for managed systems whose telemetry depends on
+        the configuration the loop chooses."""
+        for samples in stream:
+            self.step_batch(np.asarray(samples, np.float32))
+        return self.current
+
     def invalidate(self) -> None:
         """Force a plan request at the next steady window — e.g. after an
         external reconfiguration invalidated the active choice."""

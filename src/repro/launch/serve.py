@@ -7,59 +7,21 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
 
-import jax
-import jax.numpy as jnp
-
-from repro.configs.base import DEFAULT_TUNABLES, ShapeSpec, reduced
+from repro.configs.base import DEFAULT_TUNABLES, reduced
 from repro.configs.registry import ARCHS, get_config
-from repro.models import model as M
-from repro.train.step import make_prefill_step, make_serve_step
+from repro.kermit.serving.engine import get_engine
 
 
 def serve_batch(cfg, batch: int, prompt_len: int, gen: int, tun, seed=0):
-    key = jax.random.PRNGKey(seed)
-    params = M.init(key, cfg)
-    cache_len = prompt_len + gen
-    shape = ShapeSpec("serve", cache_len, batch, "prefill")
-    pf_shape = ShapeSpec("pf", prompt_len, batch, "prefill")
-    b = M.make_batch(key, cfg, pf_shape)
+    """Batched prefill + greedy decode; returns timing + generated tokens.
 
-    prefill = jax.jit(make_prefill_step(cfg, tun))
-    decode = jax.jit(make_serve_step(cfg, tun), donate_argnums=(1,))
-
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, b)
-    # grow caches to cache_len for attention families
-    def grow(path, a):
-        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
-        if name in ("k", "v", "k0", "v0") and a.ndim >= 4:
-            pad = [(0, 0)] * a.ndim
-            pad[-3] = (0, gen)
-            return jnp.pad(a, pad)
-        return a
-    cache = jax.tree_util.tree_map_with_path(grow, cache)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    tokens = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-    out = [tokens]
-    t0 = time.perf_counter()
-    for i in range(gen):
-        step_batch = {"tokens": tokens,
-                      "pos": jnp.asarray(prompt_len + i, jnp.int32)}
-        logits, cache = decode(params, cache, step_batch)
-        tokens = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        out.append(tokens)
-    jax.block_until_ready(tokens)
-    t_decode = time.perf_counter() - t0
-    return {
-        "prefill_s": t_prefill,
-        "decode_s": t_decode,
-        "decode_tok_per_s": batch * gen / t_decode,
-        "generated": jnp.concatenate(out, 1).tolist(),
-    }
+    Routed through the shared ``ServeEngine`` for (cfg, seed): params are
+    initialized and prefill/decode steps jitted once per process, so
+    repeated calls (e.g. knob evaluations during a KERMIT search) reuse the
+    compiled steps instead of paying init + retrace every time.  The result
+    dict and greedy decode are unchanged."""
+    return get_engine(cfg, seed).serve_legacy(batch, prompt_len, gen, tun)
 
 
 def main(argv=None):

@@ -21,6 +21,24 @@ from repro.core.windows import FEATURES, NUM_FEATURES
 _IDX = {f: i for i, f in enumerate(FEATURES)}
 
 
+def percentile(values, q: float) -> float:
+    """Nearest-rank percentile (no interpolation): the smallest sample x
+    such that at least ``q`` percent of the samples are <= x.
+
+    Deterministic and exact — the returned value is always one of the
+    samples, so serving p99 gates compare actual measured latencies rather
+    than interpolated artifacts.  ``q`` is in [0, 100]; q=0 returns the
+    minimum, q=100 the maximum.
+    """
+    a = np.sort(np.asarray(values, np.float64).reshape(-1))
+    if a.size == 0:
+        raise ValueError("percentile() of empty sample set")
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q} outside [0, 100]")
+    rank = int(np.ceil(q / 100.0 * a.size))
+    return float(a[max(rank, 1) - 1])
+
+
 @dataclass
 class StepStats:
     step_time: float

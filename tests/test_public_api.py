@@ -27,13 +27,20 @@ PUBLIC_API = [
     "NoiseFault",
     "PlanConfig",
     "ResilientExecutor",
+    "SERVE_SPACE",
+    "ServeConfig",
+    "ServeEngine",
+    "ServeExecutor",
     "SessionCrash",
     "SimulatorExecutor",
     "StragglerFault",
     "StuckKnobFault",
+    "TrafficGenerator",
+    "TrafficPhase",
     "TransientFaults",
     "fault_from_dict",
     "resolve_impl",
+    "run_serving_session",
 ]
 
 
@@ -48,9 +55,9 @@ def test_public_api_importable():
 
 def test_session_surface():
     """The methods examples/docs rely on exist with stable names."""
-    for method in ("step", "step_batch", "run", "subscribe", "bind_executor",
-                   "invalidate", "save_knowledge", "summary", "close",
-                   "checkpoint", "restore", "__enter__", "__exit__"):
+    for method in ("step", "step_batch", "run", "run_live", "subscribe",
+                   "bind_executor", "invalidate", "save_knowledge", "summary",
+                   "close", "checkpoint", "restore", "__enter__", "__exit__"):
         assert callable(getattr(kermit.KermitSession, method)), method
     for method in ("run",):
         assert callable(getattr(kermit.KermitSupervisor, method)), method
