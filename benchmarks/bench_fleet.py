@@ -1,0 +1,252 @@
+"""Fleet-scale Monitor phase: ``KermitFleet`` vs S isolated sessions.
+
+A provider running the MAPE-K loop for a fleet of tenant sessions pays the
+Monitor tax S times per window tick — S device dispatches, S Python round
+trips.  ``KermitFleet`` collapses that to one vmapped ``fleet_monitor_step``
+dispatch per tick over a shared ``BatchedWindowRing`` (see
+docs/architecture.md "Fleet-scale MAPE-K").  Two gates, both with teeth:
+
+* **Aggregate ingest throughput** — S tenants fed one window per lockstep
+  tick, trained classifier + predictor attached, no analysis in the timed
+  region (the steady state of a managed fleet).  Target: **>= 10x aggregate
+  windows/s at S=256 vs S scalar ``KermitSession``s on CPU** (smoke runs
+  S=64 against a reduced floor).  Per-tenant labels must be bit-equal to
+  the scalar sessions', so the speedup cannot come from degraded decisions.
+
+* **Full-loop parity + transfer** — small fleet with per-tenant
+  ``SimulatorExecutor``s and cross-tenant transfer ON vs S isolated
+  sessions on the same seeded traces: labels, transition window ids,
+  committed winners and per-label stored configs must all be bit-identical,
+  AND the shared knowledge base must warm-start at least one search from a
+  foreign tenant with ``fleet_evals_saved > 0`` — transfer saves work
+  without changing any tenant's decisions.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+
+WINDOW = 16
+SPEEDUP_TARGET = 10.0          # S=256, full mode
+SPEEDUP_TARGET_SMOKE = 5.0     # S=64 — scalar cost grows ~linearly in S
+
+TRAIN_SCHED = [("dense_train", 30), ("moe_train", 30), ("dense_train", 30)]
+STREAM_ARCHES = ["dense_train", "moe_train", "dense_train", "decode_serve"]
+
+
+def _trained_artifacts(seed: int = 123):
+    from repro.core.analyser import KermitAnalyser
+    from repro.core.knowledge import WorkloadDB
+    from repro.core.simulator import generate
+    from repro.core.windows import make_windows
+    sim = generate(TRAIN_SCHED, window_size=WINDOW, seed=seed)
+    an = KermitAnalyser(WorkloadDB(None, drift_eps=1.0))
+    an.run(make_windows(sim.samples, WINDOW))
+    assert an.predictor is not None, "training schedule too short for LSTM"
+    return an.classifier, an.predictor
+
+
+def _tenant_traces(n_tenants: int, n_windows: int):
+    """(S, T*W, F) — same schedule, per-tenant seeds, equal lengths."""
+    from repro.core.simulator import generate
+    per = max(n_windows // len(STREAM_ARCHES), 2)
+    sched = [(a, per) for a in STREAM_ARCHES]
+    out = []
+    for s in range(n_tenants):
+        tr = generate(sched, window_size=WINDOW, seed=s).samples
+        out.append(tr[:(tr.shape[0] // WINDOW) * WINDOW])
+    n = min(t.shape[0] for t in out)
+    return np.stack([t[:n] for t in out])
+
+
+def _steady_config():
+    """Monitor-phase steady state: no analysis in the timed region, small
+    retention so S=256 rings stay cheap to allocate."""
+    from repro.kermit import AnalysisConfig, KermitConfig, MonitorConfig
+    return KermitConfig(
+        monitor=MonitorConfig(window_size=WINDOW, retention=256),
+        analysis=AnalysisConfig(interval=10 ** 9))
+
+
+def _scalar_pass(traces, clf, pred):
+    """S isolated sessions, one window per tick each (the online cadence a
+    fleet of independent loops actually runs at)."""
+    from repro.kermit import KermitSession
+    S, N, _ = traces.shape
+    T = N // WINDOW
+    sessions = []
+    for _ in range(S):
+        sess = KermitSession(_steady_config())
+        sess.monitor.classifier, sess.monitor.predictor = clf, pred
+        sessions.append(sess)
+    t0 = time.perf_counter()
+    for k in range(T):
+        lo, hi = k * WINDOW, (k + 1) * WINDOW
+        for s in range(S):
+            sessions[s].step_batch(traces[s, lo:hi])
+    dt = time.perf_counter() - t0
+    labels = np.stack([s.monitor._ring.ordered()[2] for s in sessions])
+    for s in sessions:
+        s.close()
+    return dt, labels
+
+
+def _fleet_pass(traces, clf, pred):
+    from repro.kermit import FleetConfig, KermitFleet
+    S = traces.shape[0]
+    fleet = KermitFleet(FleetConfig(tenants=S, base=_steady_config(),
+                                    transfer=False))
+    for t in range(S):
+        mv = fleet._tenants[t].monitor
+        mv.classifier, mv.predictor = clf, pred
+    t0 = time.perf_counter()
+    fleet.ingest(traces)
+    dt = time.perf_counter() - t0
+    labels = np.stack([fleet.ring.ordered(s)[2] for s in range(S)])
+    return dt, labels, fleet
+
+
+def _throughput(smoke: bool):
+    S = 64 if smoke else 256
+    T = 24 if smoke else 64
+    target = SPEEDUP_TARGET_SMOKE if smoke else SPEEDUP_TARGET
+    clf, pred = _trained_artifacts()
+    traces = _tenant_traces(S, T)
+    n_win = S * (traces.shape[1] // WINDOW)
+
+    _fleet_pass(traces, clf, pred)                     # compile fleet step
+    fleet_dt, fleet_labels, fleet = _fleet_pass(traces, clf, pred)
+    _scalar_pass(traces[:2], clf, pred)                # compile scalar step
+    scalar_dt, scalar_labels = _scalar_pass(traces, clf, pred)
+
+    parity = bool(np.array_equal(scalar_labels, fleet_labels))
+    if not parity:
+        d = np.argwhere(scalar_labels != fleet_labels)
+        raise AssertionError(
+            f"fleet monitor diverged from scalar sessions at (tenant, "
+            f"window) {d[:5].tolist()}")
+    speedup = scalar_dt / fleet_dt
+    if speedup < target:
+        raise AssertionError(
+            f"fleet ingest speedup {speedup:.1f}x below the "
+            f"{target:.0f}x floor at S={S}")
+
+    row(f"fleet/ingest_S{S}_scalar", f"{n_win / scalar_dt:.0f}w/s",
+        f"{scalar_dt:.3f}s total")
+    row(f"fleet/ingest_S{S}_fleet", f"{n_win / fleet_dt:.0f}w/s",
+        f"{fleet_dt:.3f}s total;dispatches={fleet.stats.dispatches}")
+    row(f"fleet/ingest_S{S}_speedup", f"{speedup:.1f}x",
+        f"target>={target:.0f}x;labels=bit-equal")
+    return {
+        "tenants": S, "windows_per_tenant": traces.shape[1] // WINDOW,
+        "scalar_s": scalar_dt, "fleet_s": fleet_dt,
+        "scalar_windows_per_s": n_win / scalar_dt,
+        "fleet_windows_per_s": n_win / fleet_dt,
+        "speedup": speedup, "speedup_target": target,
+        "monitor_parity": "bit-equal",
+        "fleet_dispatches": fleet.stats.dispatches,
+    }
+
+
+def _parity_transfer(smoke: bool):
+    from repro.kermit import (AnalysisConfig, FleetConfig, KermitConfig,
+                              KermitFleet, KermitSession, MonitorConfig,
+                              SimulatorExecutor)
+    S = 4 if smoke else 8
+    sched = [("dense_train", 30), ("moe_train", 30), ("dense_train", 34)]
+    base = KermitConfig(monitor=MonitorConfig(window_size=WINDOW),
+                        analysis=AnalysisConfig(interval=24))
+
+    sessions = []
+    for s in range(S):
+        sess = KermitSession(
+            base, executor=SimulatorExecutor(sched, window_size=WINDOW,
+                                             seed=s))
+        sess.run()
+        sessions.append(sess)
+
+    fleet = KermitFleet(
+        FleetConfig(tenants=S, base=base, transfer=True),
+        executors=lambda t: SimulatorExecutor(sched, window_size=WINDOW,
+                                              seed=t))
+    fleet.run()
+
+    mism = []
+    for s in range(S):
+        sess = sessions[s]
+        if not np.array_equal(sess.monitor._ring.ordered()[2],
+                              fleet.ring.ordered(s)[2]):
+            mism.append(f"tenant {s}: labels")
+        st = sorted(e.window_id for e in sess.events
+                    if e.kind == "transition")
+        ft = sorted(e.window_id for e in fleet.events
+                    if e.kind == "transition" and e.tenant == s)
+        if st != ft:
+            mism.append(f"tenant {s}: transition windows {st} vs {ft}")
+        if sess.current != fleet.current[s]:
+            mism.append(f"tenant {s}: committed winner")
+        view = fleet.tenant_db(s)
+        for l, rec in sorted(sess.db.records.items()):
+            frec = view.records.get(l)
+            if frec is None or rec.config != frec.config \
+                    or rec.has_optimal != frec.has_optimal:
+                mism.append(f"tenant {s}: label {l} stored config")
+    if mism:
+        raise AssertionError(
+            "fleet decisions diverged from isolated sessions: "
+            + "; ".join(mism[:6]))
+
+    st = fleet.stats
+    scalar_evals = sum(s.plugin.stats.evaluations for s in sessions)
+    fleet_evals = sum(fleet.plugin_stats(t).evaluations for t in range(S))
+    assert st.warm_transfers >= 1, \
+        f"no cross-tenant warm starts at S={S} (transfer inert)"
+    assert st.fleet_evals_saved >= 1, \
+        "cross-tenant transfer saved no evaluations"
+    assert fleet_evals <= scalar_evals, \
+        f"fleet spent MORE evals ({fleet_evals}) than isolated sessions " \
+        f"({scalar_evals})"
+
+    row(f"fleet/parity_S{S}", "bit-equal",
+        "labels+transitions+winners+stored configs")
+    row(f"fleet/transfer_S{S}", f"{st.warm_transfers} warm starts",
+        f"evals {scalar_evals}->{fleet_evals};saved={st.fleet_evals_saved}")
+    return {
+        "tenants": S, "parity": "bit-equal",
+        "warm_transfers": st.warm_transfers,
+        "fleet_evals_saved": st.fleet_evals_saved,
+        "scalar_evaluations": scalar_evals,
+        "fleet_evaluations": fleet_evals,
+        "analyses": st.analyses, "plans": st.plans,
+    }
+
+
+def main(smoke: bool = False):
+    thr = _throughput(smoke)
+    par = _parity_transfer(smoke)
+    # gate cells in the scenario-artifact shape, so the committed baseline
+    # (benchmarks/baselines/BENCH_fleet.json) arms scripts/check_regression.py
+    scenarios = {
+        "fleet_ingest_speedup": {
+            "ok": True, "recovery_ratio": None, "metric": thr["speedup"],
+            "gates": {"min_speedup": thr["speedup"] >=
+                      thr["speedup_target"],
+                      "monitor_parity": True},
+        },
+        "fleet_parity_transfer": {
+            "ok": True, "recovery_ratio": None, "metric": None,
+            "gates": {"decision_parity": True,
+                      "min_warm_started": par["warm_transfers"] >= 1,
+                      "min_fleet_evals_saved":
+                      par["fleet_evals_saved"] >= 1},
+        },
+    }
+    return {"throughput": thr, "parity_transfer": par,
+            "scenarios": scenarios}
+
+
+if __name__ == "__main__":
+    main()

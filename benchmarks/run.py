@@ -36,10 +36,11 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_analysis_latency, bench_autonomic_e2e,
                             bench_change_detector, bench_classifiers,
-                            bench_clustering, bench_explorer, bench_kernels,
-                            bench_knowledge, bench_monitor_throughput,
-                            bench_predictor, bench_roofline, bench_scenarios,
-                            bench_serve, bench_transition, bench_zsl)
+                            bench_clustering, bench_explorer, bench_fleet,
+                            bench_kernels, bench_knowledge,
+                            bench_monitor_throughput, bench_predictor,
+                            bench_roofline, bench_scenarios, bench_serve,
+                            bench_transition, bench_zsl)
     suites = [
         ("change_detector[fig9]", bench_change_detector),
         ("classifiers[fig6]", bench_classifiers),
@@ -53,6 +54,7 @@ def main(argv=None) -> None:
         ("knowledge[zsl k-way + drift + match throughput]", bench_knowledge),
         ("analysis_latency[perf]", bench_analysis_latency),
         ("monitor_throughput[perf]", bench_monitor_throughput),
+        ("fleet[vmapped monitor + cross-tenant transfer]", bench_fleet),
         ("autonomic_e2e", bench_autonomic_e2e),
         ("scenarios[self-healing]", bench_scenarios),
         ("serving[autonomic serving gate]", bench_serve),

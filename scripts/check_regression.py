@@ -6,8 +6,9 @@ against the committed baseline and fail on self-healing regressions.
         benchmarks/baselines/BENCH_scenarios.json [--max-drop 0.2]
 
 Failure conditions:
-  * a scenario whose recovery_ratio dropped more than ``--max-drop``
-    (relative) below the baseline's
+  * a scenario whose recovery_ratio (or generic higher-is-better ``metric``,
+    e.g. the fleet ingest speedup in BENCH_fleet.json) dropped more than
+    ``--max-drop`` (relative) below the baseline's
   * a (scenario, seed, impl) cell or gate that passed in the baseline and
     fails now
 
@@ -53,11 +54,14 @@ def compare(new: dict, old: dict, *, max_drop: float = 0.2) -> list[str]:
                 msg = f"{key}: gate {gate} regressed (pass -> fail)"
                 if msg not in " ".join(problems):
                     problems.append(msg)
-        p, c = prev.get("recovery_ratio"), cur.get("recovery_ratio")
-        if p is not None and c is not None and c < p * (1.0 - max_drop):
-            problems.append(
-                f"{key}: recovery_ratio {c:.3f} dropped >"
-                f"{max_drop:.0%} below baseline {p:.3f}")
+        # numeric trajectories: recovery_ratio (chaos scenarios) and the
+        # generic higher-is-better "metric" field (e.g. fleet ingest speedup)
+        for fieldname in ("recovery_ratio", "metric"):
+            p, c = prev.get(fieldname), cur.get(fieldname)
+            if p is not None and c is not None and c < p * (1.0 - max_drop):
+                problems.append(
+                    f"{key}: {fieldname} {c:.3f} dropped >"
+                    f"{max_drop:.0%} below baseline {p:.3f}")
     for key in sorted(set(new) - set(old)):
         print(f"note: new scenario {key} (no baseline)")
     return problems

@@ -134,6 +134,7 @@ class WorkloadRecord:
     updated_at: float = field(default_factory=time.time)
     drift_score: float = 0.0              # EMA of observed drift distances
     origin_mean: Optional[np.ndarray] = None   # anchor for divergence checks
+    tenant: Optional[int] = None          # fleet owner; None = single-tenant
 
 
 _RECORD_FIELDS = {f.name for f in dataclasses.fields(WorkloadRecord)}
@@ -205,6 +206,8 @@ class WorkloadDB:
             "synthetic": np.asarray([r.is_synthetic for r in recs], bool),
             "has_config": np.asarray([r.config is not None for r in recs],
                                      bool),
+            "tenant": np.asarray([-1 if r.tenant is None else r.tenant
+                                  for r in recs], np.int64),
             "syn_pairs": {r.pair: r.label for r in recs
                           if r.is_synthetic and r.pair is not None},
             "row_of": {r.label: i for i, r in enumerate(recs)},
@@ -239,23 +242,27 @@ class WorkloadDB:
 
     # -- core operations ----------------------------------------------------
 
-    def find_match(self, char: dict, *, impl: str | None = None
-                   ) -> Optional[int]:
+    def find_match(self, char: dict, *, tenant: int | None = None,
+                   impl: str | None = None) -> Optional[int]:
         """Statistical match (batched Welch kernel; ``impl="legacy"`` runs
         the seed per-record loop) with an L2 ranking among the statistical
         matches; returns the matching label or None.  Synthetic
         (ZSL-anticipated) records never match — a real observation of an
         anticipated hybrid is a *new* class discovery, not a re-observation.
+        ``tenant`` restricts matching to that tenant's records (fleet
+        namespace isolation); None considers every record.
         """
         impl = self.impl if impl is None else impl
         if impl in ("legacy", "seed"):
-            return self._find_match_legacy(char)
+            return self._find_match_legacy(char, tenant=tenant)
         A = self._ensure_arrays()
         R = A["n"]
         if R == 0:
             return None
         sig = self._significant_flags(A, char)
         match = ~sig & ~A["synthetic"]
+        if tenant is not None:
+            match &= A["tenant"] == tenant
         if not match.any():
             return None
         d = np.linalg.norm(A["mean"] - np.asarray(char["mean"], np.float32),
@@ -286,10 +293,13 @@ class WorkloadDB:
             jnp.float32(char["n"]), mask, alpha=m.alpha, quorum=m.quorum)
         return np.asarray(flags)[:R]
 
-    def _find_match_legacy(self, char: dict) -> Optional[int]:
+    def _find_match_legacy(self, char: dict, *,
+                           tenant: int | None = None) -> Optional[int]:
         best, best_d = None, np.inf
         for label, rec in self.records.items():
             if rec.is_synthetic:
+                continue
+            if tenant is not None and rec.tenant != tenant:
                 continue
             d = l2_drift(rec.characterization, char)
             if self.matcher.match_characterization(rec.characterization,
@@ -314,14 +324,15 @@ class WorkloadDB:
         self._update_row(rec)
 
     def insert(self, char: dict, *, is_synthetic=False, pair=None,
-               label: int | None = None) -> int:
+               label: int | None = None, tenant: int | None = None) -> int:
         label = self.new_label() if label is None else label
         self._next_label = max(self._next_label, label + 1)
         self.records[label] = WorkloadRecord(
             label=label, characterization=char, is_synthetic=is_synthetic,
             pair=tuple(pair) if pair is not None else None,
             observations=char.get("n", 0),
-            origin_mean=np.asarray(char["mean"], np.float32).copy())
+            origin_mean=np.asarray(char["mean"], np.float32).copy(),
+            tenant=tenant)
         self.aliases.pop(label, None)
         self._trim_journal()
         self._dirty()
@@ -401,23 +412,34 @@ class WorkloadDB:
         return self.records.get(self.resolve(label))
 
     def nearest_config(self, char: dict, *, exclude_label: int | None = None,
+                       tenant: int | None = None,
                        impl: str | None = None) -> Optional[tuple]:
         """Warm-start lookup: the stored configuration whose workload
         characterization is nearest (L2 over means) to ``char``.  Unlike
         ``find_match`` this ranks *synthetic* (ZSL-anticipated) records too —
         an anticipated hybrid's configuration is exactly what a never-seen
-        workload should start its search from.  Returns
-        ``(config, label, distance)`` or None when no record has a config."""
+        workload should start its search from.  ``tenant`` restricts donors
+        to one tenant's records; the default (None) is tenant-agnostic —
+        the fleet's cross-tenant warm-start transfer path.
+        ``exclude_label`` is resolved through the alias map first, so
+        excluding a merged (absorbed) label excludes its surviving record.
+        Returns ``(config, label, distance)`` or None when no record has a
+        config."""
         impl = self.impl if impl is None else impl
+        if exclude_label is not None:
+            exclude_label = self.resolve(exclude_label)
         if impl in ("legacy", "seed"):
             return self._nearest_config_legacy(char,
-                                               exclude_label=exclude_label)
+                                               exclude_label=exclude_label,
+                                               tenant=tenant)
         A = self._ensure_arrays()
         if A["n"] == 0:
             return None
         ok = A["has_config"].copy()
         if exclude_label is not None:
             ok &= A["labels"] != exclude_label
+        if tenant is not None:
+            ok &= A["tenant"] == tenant
         if not ok.any():
             return None
         d = np.linalg.norm(A["mean"] - np.asarray(char["mean"], np.float32),
@@ -428,11 +450,14 @@ class WorkloadDB:
         return dict(self.records[label].config), label, float(d[i])
 
     def _nearest_config_legacy(self, char: dict, *,
-                               exclude_label: int | None = None
+                               exclude_label: int | None = None,
+                               tenant: int | None = None
                                ) -> Optional[tuple]:
         best, best_label, best_d = None, None, np.inf
         for label, rec in self.records.items():
             if label == exclude_label or rec.config is None:
+                continue
+            if tenant is not None and rec.tenant != tenant:
                 continue
             d = l2_drift(rec.characterization, char)
             if d < best_d:
@@ -450,18 +475,22 @@ class WorkloadDB:
 
     # -- convergence / bound maintenance -------------------------------------
 
-    def consolidate(self) -> list[dict]:
+    def consolidate(self, *, tenant: int | None = None) -> list[dict]:
         """Merge non-synthetic classes whose characterizations have converged
         within ``merge_eps`` (vectorized pairwise distances, newer label
-        aliased onto older), then enforce the record bound.  Returns the
-        journal entries this pass produced (they also stay queued for
-        ``drain_events``)."""
+        aliased onto older), then enforce the record bound.  Merging never
+        crosses tenant tags — two tenants' records stay distinct classes no
+        matter how close their characterizations — and ``tenant`` restricts
+        the pass to one tenant's records (the fleet's per-tenant analysis
+        scope).  Returns the journal entries this pass produced (they also
+        stay queued for ``drain_events``)."""
         self._trim_journal()
         start = len(self._journal)
         if self.merge_eps > 0.0:
             while True:
                 recs = [r for r in self.records.values()
-                        if not r.is_synthetic]
+                        if not r.is_synthetic
+                        and (tenant is None or r.tenant == tenant)]
                 if len(recs) < 2:
                     break
                 M = np.stack([np.asarray(r.characterization["mean"],
@@ -469,6 +498,9 @@ class WorkloadDB:
                 D = np.linalg.norm(M[:, None, :] - M[None, :, :], axis=-1)
                 iu = np.triu_indices(len(recs), k=1)
                 close = D[iu] < self.merge_eps
+                T = np.asarray([-1 if r.tenant is None else r.tenant
+                                for r in recs], np.int64)
+                close &= T[iu[0]] == T[iu[1]]
                 if not close.any():
                     break
                 k = int(np.flatnonzero(close)[np.argmin(D[iu][close])])

@@ -47,7 +47,10 @@ _MAX_BATCH = 128
 _BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128)
 
 # observability: fused-program executions ("dispatches") and retraces —
-# tests assert one dispatch per ingested batch and a stable trace count warm
+# tests assert one dispatch per ingested batch and a stable trace count warm.
+# This module dict is the process-wide *aggregate* view; each KermitMonitor
+# (and each KermitFleet) also keeps its own ``stats`` dict so concurrent
+# monitors don't cross-contaminate each other's counts.
 FASTPATH_STATS = {"dispatches": 0, "traces": 0}
 
 
@@ -105,6 +108,42 @@ _monitor_step_jit = partial(jax.jit, static_argnames=(
         _monitor_step)
 
 
+def fleet_monitor_step(mean, var, prev_mean, prev_var, has_prev, hist_carry,
+                       log_len, clf_params, pred_params, mask, *, n: int,
+                       alpha: float, quorum: float, depth: int,
+                       pred_window: int, pred_classes: int):
+    """The batched-leading-axis twin of ``_monitor_step``: one window for
+    each of S tenants in a single device dispatch.
+
+    ``mean``/``var`` are (S, 1, F) — each tenant contributes a B=1 batch —
+    ``prev_mean``/``prev_var`` (S, F) per-tenant Welch carries and
+    ``hist_carry`` (S, pred_window - 1) per-tenant label histories.
+    ``has_prev``/``log_len`` are scalars (fleet tenants advance in lockstep,
+    so history length is shared).  Classifier/predictor params are either
+    None (shared absence) or pytrees stacked along a leading tenant axis —
+    tenants whose trained models differ in shape must be dispatched as
+    separate cohorts by the caller (``KermitFleet`` groups them).
+
+    ``jax.vmap`` of the very same ``_monitor_step`` body keeps per-tenant
+    arithmetic bit-identical to a scalar monitor driven one window at a time
+    — the fleet parity gate in ``benchmarks/bench_fleet.py`` holds because
+    this function adds a batch axis without changing any per-element op."""
+    fn = partial(_monitor_step, n=n, alpha=alpha, quorum=quorum, depth=depth,
+                 pred_window=pred_window, pred_classes=pred_classes)
+    axes = (0, 0, 0, 0, None, 0, None,
+            None if clf_params is None else 0,
+            None if pred_params is None else 0,
+            None)
+    return jax.vmap(fn, in_axes=axes)(
+        mean, var, prev_mean, prev_var, has_prev, hist_carry, log_len,
+        clf_params, pred_params, mask)
+
+
+fleet_monitor_step_jit = partial(jax.jit, static_argnames=(
+    "n", "alpha", "quorum", "depth", "pred_window", "pred_classes"))(
+        fleet_monitor_step)
+
+
 class KermitMonitor:
     def __init__(self, *, window_size: int = 32,
                  detector: Optional[ChangeDetector] = None,
@@ -120,6 +159,9 @@ class KermitMonitor:
         self.predictor = predictor        # WorkloadPredictor | None
         self.fast = fast
         self.root = Path(root) if root else None
+        # per-monitor fast-path counters; the module-level FASTPATH_STATS
+        # stays the cross-monitor aggregate (see its comment)
+        self.stats = {"dispatches": 0, "traces": 0}
         self._buf: list = []
         self._prev_window = None
         self._window_id = 0
@@ -295,6 +337,8 @@ class KermitMonitor:
             pred_params = None
 
         FASTPATH_STATS["dispatches"] += 1
+        self.stats["dispatches"] += 1
+        traces_before = FASTPATH_STATS["traces"]
         trans, labels, preds = _monitor_step_jit(
             jnp.asarray(mean_p), jnp.asarray(var_p),
             jnp.asarray(prev_m), jnp.asarray(prev_v), np.bool_(has_prev),
@@ -302,6 +346,9 @@ class KermitMonitor:
             clf_params, pred_params, mask,
             n=self.window_size, alpha=det.alpha, quorum=det.quorum,
             depth=depth, pred_window=pw, pred_classes=pcl)
+        # attribute retraces to this monitor: the jit call is synchronous,
+        # so the aggregate delta across it is exactly this dispatch's traces
+        self.stats["traces"] += FASTPATH_STATS["traces"] - traces_before
         trans = np.asarray(trans)[:B]
         labels = np.asarray(labels)[:B]
         preds = np.asarray(preds)[:, :B]

@@ -26,6 +26,7 @@ from repro.kermit.config import (AnalysisConfig, ExecConfig, IMPL_CHOICES,
 from repro.kermit.events import EVENT_KINDS, AutonomicEvent, EventKind
 from repro.kermit.executor import (BatchExecutor, CallableExecutor, Executor,
                                    ExecutorObjective, SimulatorExecutor)
+from repro.kermit.fleet import FleetConfig, FleetStats, KermitFleet
 from repro.kermit.session import KermitSession
 from repro.kermit.serving import (SERVE_SPACE, ServeConfig, ServeEngine,
                                   ServeExecutor, TrafficGenerator,
@@ -44,8 +45,11 @@ __all__ = [
     "ExecConfig",
     "Executor",
     "ExecutorObjective",
+    "FleetConfig",
+    "FleetStats",
     "IMPL_CHOICES",
     "KermitConfig",
+    "KermitFleet",
     "KermitSession",
     "KermitSupervisor",
     "KnowledgeConfig",

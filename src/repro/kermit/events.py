@@ -53,3 +53,4 @@ class AutonomicEvent:
     label: int
     tunables: Optional[dict] = None
     detail: dict = field(default_factory=dict)
+    tenant: Optional[int] = None  # fleet tenant index; None = single-session

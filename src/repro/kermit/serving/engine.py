@@ -34,6 +34,7 @@ Serving-specific knobs (``configs/base.Tunables``):
 from __future__ import annotations
 
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
@@ -252,18 +253,30 @@ class ServeEngine:
 
 # -- process-wide engine cache (the launcher's entry point) ------------------
 
-_ENGINES: dict = {}
+_ENGINES: "OrderedDict" = OrderedDict()
 _ENGINE_CACHE_MAX = 8
 
 
-def get_engine(cfg: ModelConfig, seed: int = 0) -> ServeEngine:
+def get_engine(cfg: ModelConfig, seed: int = 0, *,
+               max_engines: int | None = None) -> ServeEngine:
     """The shared engine for (cfg, seed): params are initialized and steps
-    compiled once per process, however many ``serve_batch`` calls run."""
+    compiled once per process, however many ``serve_batch`` calls run.
+
+    The cache is LRU-bounded: a hit refreshes the entry's recency and an
+    insert past the bound evicts the least-recently-used engine (params +
+    compiled steps become collectable).  ``max_engines`` overrides the
+    process-wide bound for this call — a fleet serving many model configs
+    can widen it, a memory-tight host can pin it to 1."""
+    bound = _ENGINE_CACHE_MAX if max_engines is None else int(max_engines)
+    if bound < 1:
+        raise ValueError(f"max_engines must be >= 1, got {max_engines}")
     key = (cfg, int(seed))
     eng = _ENGINES.get(key)
-    if eng is None:
-        if len(_ENGINES) >= _ENGINE_CACHE_MAX:
-            _ENGINES.pop(next(iter(_ENGINES)))
+    if eng is not None:
+        _ENGINES.move_to_end(key)
+    else:
         eng = ServeEngine(cfg, seed=seed)
         _ENGINES[key] = eng
+    while len(_ENGINES) > bound:
+        _ENGINES.popitem(last=False)
     return eng

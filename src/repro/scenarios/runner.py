@@ -19,6 +19,13 @@ paper's "without human intervention" claim into pass/fail data:
                         committed winners, event stream)
   min_restores          the supervisor actually survived this many deaths
   min_checkpoints       ... and took this many snapshots doing it
+  min_warm_started      fleet: this many searches warm-started from a class
+                        a *different* tenant discovered and tuned
+  min_fleet_evals_saved fleet: the transfer counter saved this many
+                        evaluations vs the donors' own cold searches
+  min_evals_saved_vs_isolated
+                        fleet: the whole fleet spent this many fewer
+                        evaluations than S isolated sessions
 
 Every run writes ``<scenario>--seed<k>--<impl>.json`` (schema-versioned,
 self-describing: seed + scenario spec + impl recorded) under
@@ -366,7 +373,67 @@ def _serving_metrics(events, summary: dict, final: dict, ex) -> dict:
     }
 
 
+def _run_fleet_scenario(spec: dict, *, seed: int, impl: str) -> dict:
+    """Fleet-scale MAPE-K with cross-tenant warm-start transfer: S tenants
+    with overlapping workload classes run through ONE ``KermitFleet``
+    (shared knowledge base, tenant-tagged records).  The gates check that at
+    least one tenant's search was warm-started from a class another tenant
+    discovered and tuned, and that the transfer actually saved evaluation
+    work versus S isolated sessions on the same traces."""
+    from repro.kermit import FleetConfig, KermitFleet
+
+    ws = int(spec.get("window_size", 16))
+    S = int(spec.get("tenants", 2))
+    sched = [tuple(s) for s in spec["schedule"]]
+    base = _build_config(spec, impl)
+
+    def make_executor(t):
+        return SimulatorExecutor(sched, window_size=ws, seed=seed + t,
+                                 drift=float(spec.get("drift", 0.0)))
+
+    fleet = KermitFleet(
+        FleetConfig(tenants=S, base=base,
+                    transfer=bool(spec.get("transfer", True))),
+        executors=make_executor)
+    events = []
+    fleet.subscribe(None, events.append)
+    fleet.run()
+    summary = fleet.summary()
+
+    # the external check on the transfer win: the same S streams through S
+    # isolated sessions (private DBs, no transfer possible)
+    isolated_evals = 0
+    for t in range(S):
+        with KermitSession(base, executor=make_executor(t)) as sess:
+            sess.run()
+            isolated_evals += sess.plugin.stats.evaluations
+
+    by_kind = Counter(e.kind for e in events)
+    st = fleet.stats
+    return {
+        "windows": summary["windows"],
+        "tenants": S,
+        "events": {k: int(v) for k, v in sorted(by_kind.items())},
+        "retunes": int(by_kind.get(EventKind.RETUNE.value, 0)),
+        "known_workloads": summary["known_workloads"],
+        "searches": int(summary["plugin"]["global_searches"]
+                        + summary["plugin"]["local_searches"]),
+        "reused": summary["plugin"]["reused"],
+        "evaluations": summary["plugin"]["evaluations"],
+        "failed_searches": summary["plugin"]["failed_searches"],
+        "monitor_dispatches": st.dispatches,
+        "warm_transfers": st.warm_transfers,
+        "fleet_evals_saved": st.fleet_evals_saved,
+        "isolated_evaluations": int(isolated_evals),
+        "evals_saved_vs_isolated":
+            int(isolated_evals - summary["plugin"]["evaluations"]),
+        "recovery_ratio": None,
+        "final_tunables": [t.as_dict() for t in fleet.current],
+    }
+
+
 _KINDS = {"session": _run_session_scenario,
+          "fleet": _run_fleet_scenario,
           "elastic": _run_elastic_scenario,
           "crash": _run_crash_restore_scenario,
           "elastic_session": _run_elastic_session_scenario,
@@ -445,6 +512,22 @@ def _eval_gates(name: str, spec: dict, metrics: dict, *,
         gate("max_human_calls",
              metrics.get("human_calls", 0) <= g["max_human_calls"],
              metrics.get("human_calls", 0), g["max_human_calls"])
+    if "min_warm_started" in g:
+        gate("min_warm_started",
+             metrics.get("warm_transfers", 0) >= g["min_warm_started"],
+             metrics.get("warm_transfers", 0), g["min_warm_started"])
+    if "min_fleet_evals_saved" in g:
+        gate("min_fleet_evals_saved",
+             metrics.get("fleet_evals_saved", 0)
+             >= g["min_fleet_evals_saved"],
+             metrics.get("fleet_evals_saved", 0),
+             g["min_fleet_evals_saved"])
+    if "min_evals_saved_vs_isolated" in g:
+        gate("min_evals_saved_vs_isolated",
+             metrics.get("evals_saved_vs_isolated", 0)
+             >= g["min_evals_saved_vs_isolated"],
+             metrics.get("evals_saved_vs_isolated", 0),
+             g["min_evals_saved_vs_isolated"])
     return gates
 
 

@@ -1,0 +1,179 @@
+"""KermitFleet unit tests: batched ring state, tenant-namespaced knowledge,
+cross-tenant warm-start transfer, and full-loop decision parity against
+isolated sessions at small S (``benchmarks/bench_fleet.py`` gates the same
+parity plus the aggregate ingest speedup at scale)."""
+import numpy as np
+import pytest
+
+from repro.core.knowledge import WorkloadDB
+from repro.core.windows import BatchedWindowRing, WindowRing
+from repro.kermit import (AnalysisConfig, FleetConfig, KermitConfig,
+                          KermitFleet, KermitSession, MonitorConfig,
+                          SimulatorExecutor)
+from repro.kermit.fleet import TenantDBView
+
+WINDOW = 16
+
+
+def _char(mean, F=8):
+    v = np.full(F, mean, np.float32)
+    one = np.ones(F, np.float32)
+    return {"mean": v, "std": one, "min": v - 1, "max": v + 1,
+            "p75": v, "p90": v, "n": 50}
+
+
+# -- BatchedWindowRing --------------------------------------------------------
+
+
+def test_batched_ring_matches_scalar_rings():
+    S, cap, F = 3, 4, 2
+    rng = np.random.default_rng(0)
+    bat = BatchedWindowRing(S, cap, F, WINDOW)
+    scalars = [WindowRing(cap, F, WINDOW) for _ in range(S)]
+    for k in range(7):                      # wraps the capacity-4 ring
+        mean = rng.normal(size=(S, F)).astype(np.float32)
+        var = rng.uniform(0.1, 1.0, size=(S, F)).astype(np.float32)
+        labels = rng.integers(0, 5, size=S).astype(np.int32)
+        bat.push_tick(mean, var, labels)
+        for s in range(S):
+            scalars[s].push(mean[s], var[s], int(labels[s]))
+    assert bat.total == 7 and len(bat) == cap
+    pm, pv = bat.last_window()
+    for s in range(S):
+        bm, bv, bl = bat.ordered(s)
+        sm, sv, sl = scalars[s].ordered()
+        np.testing.assert_array_equal(bm, sm)
+        np.testing.assert_array_equal(bv, sv)
+        np.testing.assert_array_equal(bl, sl)
+        np.testing.assert_array_equal(bat.last_labels(3)[s],
+                                      scalars[s].last_labels(3))
+        np.testing.assert_array_equal(pm[s], sm[-1])
+        ws = bat.series(s)
+        np.testing.assert_array_equal(ws.mean, sm)
+
+
+def test_batched_ring_state_roundtrip():
+    bat = BatchedWindowRing(2, 3, 2, WINDOW)
+    for k in range(5):
+        bat.push_tick(np.full((2, 2), k, np.float32),
+                      np.ones((2, 2), np.float32),
+                      np.full(2, k, np.int32))
+    back = BatchedWindowRing.from_state(*bat.export_state())
+    assert back.total == bat.total
+    for s in range(2):
+        for a, b in zip(back.ordered(s), bat.ordered(s)):
+            np.testing.assert_array_equal(a, b)
+
+
+# -- TenantDBView: namespacing + transfer -------------------------------------
+
+
+def test_tenant_view_local_label_namespace():
+    db = WorkloadDB()
+    va = TenantDBView(db, 0, max_records=64)
+    vb = TenantDBView(db, 1, max_records=64)
+    a0 = va.insert(_char(0.0))
+    a1 = va.insert(_char(2.0))
+    b0 = vb.insert(_char(0.0))              # same characterization, tenant 1
+    assert (a0, a1, b0) == (0, 1, 0)        # local labels, insert order
+    assert sorted(va.records) == [0, 1] and sorted(vb.records) == [0]
+    # matching is tenant-scoped: tenant 1 never matches tenant 0's class
+    assert va.find_match(_char(0.0)) == 0
+    assert vb.find_match(_char(2.0)) is None
+    assert db.records[va._l2g[0]].tenant == 0
+    assert db.records[vb._l2g[0]].tenant == 1
+
+
+def test_tenant_view_cross_tenant_warm_start():
+    db = WorkloadDB()
+    va = TenantDBView(db, 0, max_records=64)
+    vb = TenantDBView(db, 1, max_records=64)
+    a = va.insert(_char(1.0))
+    va.set_config(a, {"microbatches": 4}, optimal=True)
+    vb.insert(_char(1.1))                   # tenant 1's own class, no config
+    res = vb.nearest_config(_char(1.05))
+    assert res is not None and res[0] == {"microbatches": 4}
+    assert vb.last_foreign_donor == va._l2g[a]   # donor surfaced (global)
+    # with transfer off the view only sees its own (configless) records
+    iso = TenantDBView(db, 2, max_records=64, transfer=False)
+    iso.insert(_char(1.0))
+    assert iso.nearest_config(_char(1.0)) is None
+
+
+# -- fleet construction + ingestion surface -----------------------------------
+
+
+def test_fleet_config_roundtrip_and_validation():
+    fc = FleetConfig(tenants=3, transfer=False,
+                     base=KermitConfig(monitor=MonitorConfig(window_size=8)))
+    assert FleetConfig.from_dict(fc.to_dict()) == fc
+    with pytest.raises(ValueError, match="unknown FleetConfig"):
+        FleetConfig.from_dict({"tenant_count": 3})
+    with pytest.raises(ValueError, match="legacy"):
+        KermitFleet(FleetConfig(base=KermitConfig(impl="legacy")))
+    with pytest.raises(ValueError, match="at least one tenant"):
+        KermitFleet(FleetConfig(tenants=0))
+
+
+def test_fleet_ingest_buffers_partial_windows():
+    fleet = KermitFleet(FleetConfig(
+        tenants=2, base=KermitConfig(monitor=MonitorConfig(
+            window_size=WINDOW))))
+    rng = np.random.default_rng(1)
+    half = rng.normal(size=(2, WINDOW // 2, 16)).astype(np.float32)
+    fleet.ingest(half)
+    assert fleet.pending_samples == WINDOW // 2 and fleet.ring is None
+    fleet.ingest(half)                       # completes one window per tenant
+    assert fleet.pending_samples == 0
+    assert fleet.ring is not None and fleet.ring.total == 1
+    with pytest.raises(ValueError, match="tenants=2"):
+        fleet.ingest(np.zeros((3, WINDOW, 16), np.float32))
+
+
+def test_fleet_run_rejects_unequal_traces():
+    fleet = KermitFleet(FleetConfig(tenants=2))
+    with pytest.raises(ValueError, match="equal-length"):
+        fleet.run([np.zeros((32, 16), np.float32),
+                   np.zeros((48, 16), np.float32)])
+
+
+# -- full-loop parity vs isolated sessions ------------------------------------
+
+
+def test_fleet_decisions_match_isolated_sessions():
+    S = 2
+    sched = [("dense_train", 14), ("moe_train", 14)]
+    base = KermitConfig(monitor=MonitorConfig(window_size=WINDOW),
+                        analysis=AnalysisConfig(interval=12))
+
+    sessions = []
+    for s in range(S):
+        sess = KermitSession(base, executor=SimulatorExecutor(
+            sched, window_size=WINDOW, seed=s))
+        sess.run()
+        sessions.append(sess)
+
+    fleet = KermitFleet(
+        FleetConfig(tenants=S, base=base, transfer=True),
+        executors=lambda t: SimulatorExecutor(sched, window_size=WINDOW,
+                                              seed=t))
+    fleet.run()
+
+    assert fleet.stats.ticks == sessions[0].monitor._ring.total
+    assert fleet.stats.plans > 0
+    for s in range(S):
+        sess = sessions[s]
+        np.testing.assert_array_equal(sess.monitor._ring.ordered()[2],
+                                      fleet.ring.ordered(s)[2])
+        st = sorted(e.window_id for e in sess.events
+                    if e.kind == "transition")
+        ft = sorted(e.window_id for e in fleet.events
+                    if e.kind == "transition" and e.tenant == s)
+        assert st == ft
+        assert sess.current == fleet.current[s]
+        view = fleet.tenant_db(s)
+        assert sorted(view.records) == sorted(sess.db.records)
+        for l, rec in sess.db.records.items():
+            assert view.records[l].config == rec.config
+    # the shared store is tenant-tagged: every live record carries its owner
+    assert all(r.tenant in range(S) for r in fleet.db.records.values())

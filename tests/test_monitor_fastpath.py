@@ -256,6 +256,29 @@ def test_window_ring_batch_overfill():
         ring.last_labels(6)
 
 
+def test_ingest_array_batch_exceeds_retention(artifacts):
+    # ONE ingest_array call carrying more windows than the ring retains:
+    # the batch-overfill path must keep window ids counting, retain exactly
+    # the trailing windows, and decide bit-identically to the seed path
+    clf, pred = artifacts
+    samples = _stream(seed=31)
+    n_win = samples.shape[0] // WINDOW
+    ret = 8                   # >= the predictor window, < one ingest batch
+    assert n_win > ret
+    seed_ctxs, _ = _run(samples, fast=False, batch=False, clf=clf, pred=pred)
+    fast_ctxs, mon = _run(samples, fast=True, batch=True, clf=clf, pred=pred,
+                          retention=ret)
+    assert _decisions(fast_ctxs) == _decisions(seed_ctxs)
+    ring = mon._ring
+    assert ring.total == n_win and len(ring) == ret
+    assert fast_ctxs[-1].window_id == n_win - 1
+    want = make_windows(samples, WINDOW)
+    np.testing.assert_allclose(mon.window_series().mean, want.mean[-ret:],
+                               rtol=1e-5)
+    np.testing.assert_array_equal(
+        ring.ordered()[2], [c.current_label for c in fast_ctxs[-ret:]])
+
+
 def test_window_series_copy_survives_wraparound():
     samples = _stream(seed=23)
     mon = KermitMonitor(window_size=WINDOW, retention=8)

@@ -46,5 +46,9 @@ def test_gpipe_matches_sequential():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        capture_output=True, text=True, timeout=300,
                        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
-                            "HOME": "/root"})
+                            "HOME": "/root",
+                            # hosts with an accelerator plugin installed probe
+                            # device metadata at import; this test's 8 devices
+                            # are forced host-platform ones
+                            "JAX_PLATFORMS": "cpu"})
     assert "PIPELINE_OK" in r.stdout, f"\nstdout:{r.stdout}\nstderr:{r.stderr[-2000:]}"

@@ -344,6 +344,23 @@ def test_nearest_config_ranks_by_distance_and_skips_configless():
     assert db.nearest_config(_char(0.0), exclude_label=a)[1] == c
 
 
+def test_nearest_config_exclude_resolves_merged_alias():
+    """Excluding an absorbed (alias-merged) label must exclude its surviving
+    record — otherwise a class that just merged warm-starts from itself."""
+    db = WorkloadDB(merge_eps=0.5)
+    a = db.insert(_char(0.0))
+    b = db.insert(_char(0.1))                 # within merge_eps of a
+    c = db.insert(_char(5.0))
+    db.set_config(a, {"microbatches": 2}, optimal=True)
+    db.set_config(c, {"microbatches": 4}, optimal=True)
+    db.consolidate()                          # b aliased onto a
+    assert db.resolve(b) == a and b not in db.records
+    assert db.nearest_config(_char(0.0))[1] == a
+    for kw in ({}, {"impl": "legacy"}):
+        cfg, label, _ = db.nearest_config(_char(0.0), exclude_label=b, **kw)
+        assert label == c and cfg == {"microbatches": 4}
+
+
 def test_warm_start_config_knob():
     cfg = KermitConfig(plan=PlanConfig(batch_eval=False, warm_start=False,
                                        chunk=128, max_trace=64))

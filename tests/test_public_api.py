@@ -18,8 +18,11 @@ PUBLIC_API = [
     "ExecConfig",
     "Executor",
     "ExecutorObjective",
+    "FleetConfig",
+    "FleetStats",
     "IMPL_CHOICES",
     "KermitConfig",
+    "KermitFleet",
     "KermitSession",
     "KermitSupervisor",
     "KnowledgeConfig",
@@ -61,6 +64,9 @@ def test_session_surface():
         assert callable(getattr(kermit.KermitSession, method)), method
     for method in ("run",):
         assert callable(getattr(kermit.KermitSupervisor, method)), method
+    for method in ("ingest", "run", "subscribe", "summary", "tenant_db",
+                   "plugin_stats", "invalidate"):
+        assert callable(getattr(kermit.KermitFleet, method)), method
 
 
 def test_executor_protocol_shape():

@@ -40,3 +40,28 @@ def test_serve_respects_tunables():
     # q-chunking is a performance knob: results must be identical
     np.testing.assert_array_equal(np.asarray(r1["generated"]),
                                   np.asarray(r2["generated"]))
+
+
+def test_engine_cache_lru_bound_and_touch():
+    """get_engine's process cache is LRU: a hit refreshes recency, inserts
+    past the bound evict the least-recently-used engine."""
+    from repro.kermit.serving import get_engine
+    from repro.kermit.serving.engine import _ENGINES
+
+    saved = dict(_ENGINES)
+    _ENGINES.clear()
+    try:
+        cfg = tiny("qwen2-1.5b", dtype="float32")
+        e0 = get_engine(cfg, 0, max_engines=2)
+        e1 = get_engine(cfg, 1, max_engines=2)
+        assert get_engine(cfg, 0, max_engines=2) is e0   # hit, now MRU
+        get_engine(cfg, 2, max_engines=2)                # evicts seed 1, not 0
+        assert get_engine(cfg, 0, max_engines=2) is e0
+        assert (cfg, 1) not in _ENGINES
+        assert get_engine(cfg, 1, max_engines=2) is not e1
+        assert len(_ENGINES) == 2
+        with pytest.raises(ValueError, match="max_engines"):
+            get_engine(cfg, 0, max_engines=0)
+    finally:
+        _ENGINES.clear()
+        _ENGINES.update(saved)
