@@ -1,0 +1,153 @@
+"""Model-based Plan acceptance gate: eval budget + OFF-parity.
+
+The learned Plan path (core/costmodel.py + Explorer.model_ranked_exhaustive,
+wired through KermitPlugin ``model_guided``) must buy its speedup without
+costing decision quality.  Two gates, both with teeth, each run across
+>= 3 seeds on the default 8-knob space (grid = 5184 candidates):
+
+* **Eval budget at oracle cost** — a plugin facing a *new* workload class,
+  with only a tuned donor class's banked trace in the knowledge base
+  (the cold-start shape: no model state, no incumbent for the target),
+  must commit a config whose true cost EQUALS the brute-force exhaustive
+  oracle's, spending **<= 10% of the grid** in real measurements
+  (+1 for the incumbent safety probe).  The oracle re-prices every
+  committed winner with the ground-truth objective, so the model cannot
+  game the gate by mispricing its own candidate.
+
+* **OFF-parity** — ``model_guided=False`` (the default) must reproduce the
+  PR 4 warm-started batched search bit-identically: same winner, same
+  committed cost, same PluginStats.  The learned path is strictly opt-in.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+
+SEEDS = (0, 1, 2)
+EVAL_BUDGET = 0.10
+
+
+def _char(mean, F=8):
+    return {"mean": np.full(F, mean, np.float32),
+            "std": np.ones(F, np.float32), "n": 64}
+
+
+def _training_rows(objective, space, seed, n=300):
+    """What WorkloadDB banks for a class over repeated searches: a
+    coordinate hill-climb's trace plus a seeded random grid sample."""
+    from repro.configs.base import DEFAULT_TUNABLES
+    from repro.core.explorer import Explorer
+    ex = Explorer(space)
+    rows = list(ex.global_search(objective).trace)
+    rng = np.random.default_rng(seed)
+    for i in rng.choice(ex.grid_size(), size=min(n, ex.grid_size()),
+                        replace=False):
+        t = ex._decode_index(DEFAULT_TUNABLES, int(i))
+        rows.append((t.as_dict(), float(objective(t))))
+    return rows
+
+
+def _scenario(seed, **plugin_kw):
+    """Donor class tuned + trace banked, far-away fresh target class —
+    returns (plugin, ctx, objective, grid size)."""
+    from repro.core.explorer import DEFAULT_SPACE, Explorer
+    from repro.core.knowledge import WorkloadDB
+    from repro.core.monitor import WorkloadContext
+    from repro.core.plugin import KermitPlugin
+    from tests.oracles import seeded_objective
+    space = DEFAULT_SPACE
+    fn = seeded_objective(seed, space)
+    db = WorkloadDB(drift_eps=0.5)
+    donor = db.insert(_char(1.0))
+    donor_res = Explorer(space).global_search(fn)
+    db.set_config(donor, donor_res.best.as_dict(), optimal=True)
+    db.record_trace(donor, _training_rows(fn, space, seed))
+    target = db.insert(_char(5.0))
+    plug = KermitPlugin(db, None, Explorer(space), **plugin_kw)
+    ctx = WorkloadContext(window_id=0, timestamp=0.0, current_label=target,
+                          predicted={}, in_transition=False)
+    return plug, ctx, fn, Explorer(space).grid_size()
+
+
+def _eval_budget_gate(seeds):
+    from tests.oracles import exhaustive_oracle
+    from repro.core.explorer import DEFAULT_SPACE
+    per_seed, worst_frac = [], 0.0
+    for seed in seeds:
+        plug, ctx, fn, grid = _scenario(
+            seed, model_guided=True, significance=0.1,
+            eval_budget=EVAL_BUDGET)
+        best = plug.on_resource_request(fn, ctx)
+        _, oracle_cost = exhaustive_oracle(fn, DEFAULT_SPACE)
+        evals = plug.stats.evaluations
+        budget = int(EVAL_BUDGET * grid) + 1       # +1: incumbent probe
+        frac = evals / grid
+        worst_frac = max(worst_frac, frac)
+        committed = float(fn(best))
+        if plug.stats.model_searches != 1 or plug.stats.model_fallbacks:
+            raise AssertionError(
+                f"seed {seed}: model path did not commit "
+                f"(searches={plug.stats.model_searches}, "
+                f"fallbacks={plug.stats.model_fallbacks})")
+        if evals > budget:
+            raise AssertionError(
+                f"seed {seed}: {evals} real evals exceed the 10% budget "
+                f"({budget} of {grid})")
+        if committed > oracle_cost + 1e-9:
+            raise AssertionError(
+                f"seed {seed}: committed cost {committed} above the "
+                f"exhaustive oracle's {oracle_cost}")
+        per_seed.append({"seed": seed, "evaluations": evals,
+                         "budget": budget, "grid": grid,
+                         "eval_fraction": frac,
+                         "committed_cost": committed,
+                         "oracle_cost": oracle_cost})
+        row(f"costmodel/budget_seed{seed}", f"{evals}/{grid}",
+            f"frac={frac:.3f};oracle_cost=matched")
+    return per_seed, worst_frac
+
+
+def _off_parity_gate(seeds):
+    for seed in seeds:
+        base, ctx_a, fn, _ = _scenario(seed)
+        off, ctx_b, _, _ = _scenario(
+            seed, model_guided=False, significance=0.5, regret_bound=0.01,
+            min_trace=1, eval_budget=0.5)
+        best_a = base.on_resource_request(fn, ctx_a)
+        best_b = off.on_resource_request(fn, ctx_b)
+        if best_a != best_b or vars(base.stats) != vars(off.stats):
+            raise AssertionError(
+                f"seed {seed}: model_guided=False diverged from the PR 4 "
+                f"path ({vars(base.stats)} vs {vars(off.stats)})")
+    row("costmodel/off_parity", "bit-equal",
+        f"winner+cost+stats across {len(seeds)} seeds")
+
+
+def main(smoke: bool = False):
+    seeds = SEEDS                       # the gate is seed-swept even in CI
+    per_seed, worst_frac = _eval_budget_gate(seeds)
+    _off_parity_gate(seeds)
+    row("costmodel/eval_fraction_max", f"{worst_frac:.3f}",
+        f"target<={EVAL_BUDGET:.2f};seeds={len(seeds)}")
+    # gate cells in the scenario-artifact shape, so the committed baseline
+    # (benchmarks/baselines/BENCH_costmodel.json) arms
+    # scripts/check_regression.py
+    scenarios = {
+        "costmodel_eval_budget": {
+            "ok": True, "recovery_ratio": None, "metric": worst_frac,
+            "gates": {"within_budget": worst_frac <= EVAL_BUDGET + 1e-3,
+                      "oracle_cost_match": True,
+                      "model_committed_all_seeds": True},
+        },
+        "costmodel_off_parity": {
+            "ok": True, "recovery_ratio": None, "metric": None,
+            "gates": {"bit_identical_pr4": True},
+        },
+    }
+    return {"per_seed": per_seed, "max_eval_fraction": worst_frac,
+            "eval_budget": EVAL_BUDGET, "scenarios": scenarios}
+
+
+if __name__ == "__main__":
+    main()

@@ -36,11 +36,12 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_analysis_latency, bench_autonomic_e2e,
                             bench_change_detector, bench_classifiers,
-                            bench_clustering, bench_explorer, bench_fleet,
-                            bench_kernels, bench_knowledge,
-                            bench_monitor_throughput, bench_predictor,
-                            bench_roofline, bench_scenarios, bench_serve,
-                            bench_transition, bench_zsl)
+                            bench_clustering, bench_costmodel,
+                            bench_explorer, bench_fleet, bench_kernels,
+                            bench_knowledge, bench_monitor_throughput,
+                            bench_predictor, bench_roofline,
+                            bench_scenarios, bench_serve, bench_transition,
+                            bench_zsl)
     suites = [
         ("change_detector[fig9]", bench_change_detector),
         ("classifiers[fig6]", bench_classifiers),
@@ -51,6 +52,7 @@ def main(argv=None) -> None:
         ("kernels", bench_kernels),
         ("roofline[deliverable-g]", bench_roofline),
         ("plan_explorer[claims 30%/92.5% + batched search]", bench_explorer),
+        ("costmodel[model-based plan gate]", bench_costmodel),
         ("knowledge[zsl k-way + drift + match throughput]", bench_knowledge),
         ("analysis_latency[perf]", bench_analysis_latency),
         ("monitor_throughput[perf]", bench_monitor_throughput),

@@ -1,0 +1,278 @@
+"""Model-based Plan: learned cost surface + knob significance analysis.
+
+Two estimators over stored ``SearchResult.trace`` rows (``(config dict,
+measured cost)`` pairs — WorkloadDB keeps a bounded per-record history of
+them), both keyed to the ``configs/base`` struct-of-arrays encoding:
+
+* ``knob_sensitivity`` — Tuneful-style significance analysis (Fekry et
+  al.): per-knob main effects measured from the trace, so searches can pin
+  the knobs that demonstrably do not matter for a workload class and sweep
+  only the significant subspace.
+* ``CostModel`` — a small jitted MLP (Zaouk et al.-style) trained on the
+  same rows, used by ``Explorer.model_ranked_exhaustive`` to pre-rank the
+  grid so a budgeted probe finds the winner in the first slices.
+
+Determinism contract (property-tested): ``fit`` canonicalizes its training
+set — rows dedupe onto encoded feature keys, duplicate costs average in
+sorted order, keys sort lexicographically — so train/predict is
+bit-identical under ANY permutation of the trace.  ``knob_sensitivity``
+rankings are invariant under positive rescaling of the costs (main effects
+scale uniformly).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import encode_tunable_values, tunables_to_arrays
+
+# ---------------------------------------------------------------------------
+# Significance analysis (Plan-phase subspace pruning)
+# ---------------------------------------------------------------------------
+
+
+def knob_sensitivity(trace, space: dict) -> dict:
+    """Per-knob main effect from measured trace rows: the spread (max - min)
+    of per-value mean costs.  Knobs observed at fewer than two distinct
+    values are OMITTED — their effect is unknown, and ``significant_knobs``
+    never prunes what the trace cannot rank.  Duplicate costs are averaged
+    in sorted order so the result is independent of trace ordering."""
+    groups: dict[str, dict] = {k: {} for k in space}
+    for cfg, cost in trace:
+        for k in space:
+            if k in cfg:
+                groups[k].setdefault(_value_key(cfg[k]), []).append(
+                    float(cost))
+    sens = {}
+    for k, by_val in groups.items():
+        if len(by_val) < 2:
+            continue
+        means = [math.fsum(sorted(v)) / len(v) for v in by_val.values()]
+        sens[k] = max(means) - min(means)
+    return sens
+
+
+def significant_knobs(sens: dict, space: dict, threshold: float) -> list:
+    """Knobs worth searching: main effect >= ``threshold`` * the largest
+    effect, plus every knob ``sens`` could not rank (missing = unknown =
+    keep).  ``threshold <= 0`` disables pruning; the top-effect knob is
+    always kept.  Returned in ``space`` order."""
+    if threshold <= 0 or not sens:
+        return list(space)
+    cut = threshold * max(sens.values())
+    top = max(sens, key=lambda k: (sens[k], k))
+    return [k for k in space
+            if k == top or k not in sens or sens[k] >= cut]
+
+
+def _value_key(v):
+    # bool is an int subclass: True/1 must not collide across knobs that
+    # genuinely mix the types (they don't today, but a grouping key is the
+    # wrong place to rely on that)
+    return (type(v).__name__, v)
+
+
+# ---------------------------------------------------------------------------
+# Jitted MLP cost surface
+# ---------------------------------------------------------------------------
+
+
+def _bucket(n: int) -> int:
+    b = 8
+    while b < n:
+        b *= 2
+    return b
+
+
+def _init_params(seed: int, sizes) -> list:
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for fan_in, fan_out in zip(sizes[:-1], sizes[1:]):
+        key, sub = jax.random.split(key)
+        params.append((jax.random.normal(sub, (fan_in, fan_out),
+                                         jnp.float32) / np.sqrt(fan_in),
+                       jnp.zeros((fan_out,), jnp.float32)))
+    return params
+
+
+def _forward(params, X):
+    h = X
+    for W, b in params[:-1]:
+        h = jnp.tanh(h @ W + b)
+    W, b = params[-1]
+    return (h @ W + b)[:, 0]
+
+
+def _loss(params, X, y, w):
+    return jnp.sum(w * jnp.square(_forward(params, X) - y)) \
+        / jnp.maximum(jnp.sum(w), 1.0)
+
+
+@partial(jax.jit, static_argnames=("epochs", "lr"))
+def _fit_params(params, X, y, w, *, epochs: int, lr: float):
+    """Full-batch Adam for ``epochs`` steps, one compiled scan.  Rows are
+    bucket-padded with zero weights so retraces are bounded by distinct
+    (bucket, feature-dim) pairs, not by trace length."""
+    tm = jax.tree_util.tree_map
+    zeros = tm(jnp.zeros_like, params)
+
+    def step(carry, t):
+        p, m, v = carry
+        g = jax.grad(_loss)(p, X, y, w)
+        m = tm(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = tm(lambda a, b: 0.999 * a + 0.001 * b * b, v, g)
+        mh = tm(lambda a: a / (1.0 - 0.9 ** t), m)
+        vh = tm(lambda a: a / (1.0 - 0.999 ** t), v)
+        p = tm(lambda pp, a, b: pp - lr * a / (jnp.sqrt(b) + 1e-8),
+               p, mh, vh)
+        return (p, m, v), jnp.float32(0)
+
+    (params, _, _), _ = jax.lax.scan(
+        step, (params, zeros, zeros), jnp.arange(1.0, epochs + 1.0))
+    return params
+
+
+@jax.jit
+def _predict_params(params, X):
+    return _forward(params, X)
+
+
+class CostModel:
+    """Cost surface over one search space (knob -> candidate values).
+
+    Features per candidate: one-hot of the candidate index per knob plus a
+    normalized-position scalar (one-hot captures non-monotone effects, the
+    scalar helps the tiny net interpolate ordered numeric knobs).  Off-grid
+    values in trace rows snap to the nearest encoded candidate — the same
+    projection ``KermitPlugin._snap_to_space`` applies to stored configs.
+    Targets are standardized from the canonicalized training set, so
+    predictions come back in real cost units."""
+
+    def __init__(self, space: dict, *, hidden=(32, 16), epochs: int = 300,
+                 lr: float = 0.01, seed: int = 0):
+        if not space:
+            raise ValueError("CostModel needs a non-empty search space")
+        self.space = {k: list(v) for k, v in space.items()}
+        self.hidden = tuple(int(h) for h in hidden)
+        self.epochs = int(epochs)
+        self.lr = float(lr)
+        self.seed = int(seed)
+        self._enc = {k: np.asarray(encode_tunable_values(k, v), np.float64)
+                     for k, v in self.space.items()}
+        self.dim = sum(len(v) + 1 for v in self.space.values())
+        self.params = None
+        self._y_mean, self._y_std = 0.0, 1.0
+        self.n_train = 0
+
+    @property
+    def trained(self) -> bool:
+        return self.params is not None
+
+    # -- encoding ------------------------------------------------------------
+
+    def _index_of(self, knob: str, value) -> int:
+        enc = np.asarray(encode_tunable_values(knob, [value]), np.float64)
+        return int(np.abs(self._enc[knob] - enc[0]).argmin())
+
+    def _features_from_idx(self, idx: dict) -> np.ndarray:
+        n = len(next(iter(idx.values())))
+        X = np.zeros((n, self.dim), np.float32)
+        col = 0
+        for k, values in self.space.items():
+            m = len(values)
+            X[np.arange(n), col + idx[k]] = 1.0
+            X[:, col + m] = idx[k] / max(m - 1, 1)
+            col += m + 1
+        return X
+
+    def _canonical_rows(self, trace):
+        """(sorted feature keys, order-independent mean costs)."""
+        by_key: dict[tuple, list] = {}
+        for cfg, cost in trace:
+            if not all(k in cfg for k in self.space):
+                continue
+            key = tuple(self._index_of(k, cfg[k]) for k in self.space)
+            by_key.setdefault(key, []).append(float(cost))
+        keys = sorted(by_key)
+        y = np.array([math.fsum(sorted(by_key[k])) / len(by_key[k])
+                      for k in keys], np.float64)
+        return keys, y
+
+    # -- train / predict -----------------------------------------------------
+
+    def fit(self, trace) -> "CostModel":
+        keys, y = self._canonical_rows(trace)
+        if not keys:
+            raise ValueError("no usable trace rows cover the search space")
+        idx = {k: np.array([key[j] for key in keys], np.int64)
+               for j, k in enumerate(self.space)}
+        X = self._features_from_idx(idx)
+        self._y_mean = float(y.mean())
+        self._y_std = float(y.std()) or 1.0
+        yn = (y - self._y_mean) / self._y_std
+        n, b = len(keys), _bucket(len(keys))
+        Xp = np.zeros((b, self.dim), np.float32)
+        Xp[:n] = X
+        yp = np.zeros(b, np.float32)
+        yp[:n] = yn
+        w = np.zeros(b, np.float32)
+        w[:n] = 1.0
+        self.params = _fit_params(
+            _init_params(self.seed, (self.dim, *self.hidden, 1)),
+            jnp.asarray(Xp), jnp.asarray(yp), jnp.asarray(w),
+            epochs=self.epochs, lr=self.lr)
+        self.n_train = n
+        return self
+
+    def predict_arrays(self, soa: dict) -> np.ndarray:
+        """Predicted costs for a struct-of-arrays candidate batch (the
+        ``tunables_to_arrays`` / ``Explorer._grid_chunks`` encoding)."""
+        if self.params is None:
+            raise RuntimeError("CostModel.predict before fit")
+        idx = {}
+        for k in self.space:
+            col = np.asarray(soa[k], np.float64).reshape(-1)
+            idx[k] = np.abs(col[:, None] - self._enc[k][None, :]).argmin(1)
+        X = self._features_from_idx(idx)
+        out = np.asarray(_predict_params(self.params, jnp.asarray(X)),
+                         np.float64)
+        return out * self._y_std + self._y_mean
+
+    def predict(self, tunables) -> np.ndarray:
+        return self.predict_arrays(tunables_to_arrays(list(tunables)))
+
+    # -- durable-session state (see KermitSession.checkpoint) ----------------
+
+    def export_state(self) -> dict:
+        return {
+            "space": {k: list(v) for k, v in self.space.items()},
+            "hidden": list(self.hidden),
+            "epochs": self.epochs,
+            "lr": self.lr,
+            "seed": self.seed,
+            "n_train": self.n_train,
+            "y_mean": self._y_mean,
+            "y_std": self._y_std,
+            "params": None if self.params is None else
+                [[np.asarray(W).tolist(), np.asarray(b).tolist()]
+                 for W, b in self.params],
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "CostModel":
+        model = cls(state["space"], hidden=tuple(state["hidden"]),
+                    epochs=state["epochs"], lr=state["lr"],
+                    seed=state["seed"])
+        if state.get("params") is not None:
+            model.params = [
+                (jnp.asarray(np.asarray(W, np.float32)),
+                 jnp.asarray(np.asarray(b, np.float32)))
+                for W, b in state["params"]]
+        model._y_mean = float(state["y_mean"])
+        model._y_std = float(state["y_std"])
+        model.n_train = int(state.get("n_train", 0))
+        return model

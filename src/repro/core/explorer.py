@@ -101,6 +101,24 @@ class Explorer:
         """Drop all memoised costs (workload changed or drifted)."""
         self._memo.clear()
 
+    def grid_size(self) -> int:
+        """Number of points in the full search grid."""
+        return int(np.prod([len(v) for v in self.space.values()])) \
+            if self.space else 1
+
+    def subspace(self, keep) -> "Explorer":
+        """A fresh Explorer (same bounds, empty memo) over only the ``keep``
+        knobs.  Knobs outside the sub-space are held at whatever ``start``
+        each search is given — the significance-pruned search pins
+        insignificant knobs to warm-start values exactly this way."""
+        keep = set(keep)
+        sub = {k: v for k, v in self.space.items() if k in keep}
+        if not sub:
+            raise ValueError("subspace(keep=...) selects no knobs")
+        return Explorer(sub, max_passes=self.max_passes,
+                        max_memo=self.max_memo, max_trace=self.max_trace,
+                        chunk=self.chunk)
+
     def memo_size(self) -> int:
         # deliberately not __len__: an empty-memo Explorer must stay truthy
         # (callers use the ``explorer or Explorer()`` idiom)
@@ -274,12 +292,11 @@ class Explorer:
                     best, best_cost = cand, c
         return SearchResult(best, best_cost, counter[0], list(trace))
 
-    def _exhaustive_arrays(self, arrays_fn, start: Tunables) -> SearchResult:
-        """Grid streaming over the struct-of-arrays codec: mixed-radix index
-        decode (itertools.product order, last knob fastest) into per-knob
-        encoded value columns, one vectorized cost dispatch per chunk.  The
-        trace records improving chunk winners only (the full per-candidate
-        log would cost exactly the Python loop this path exists to avoid)."""
+    def _grid_chunks(self, start: Tunables):
+        """Yield ``(lo, soa)`` struct-of-arrays slices of the full grid in
+        mixed-radix enumeration order (itertools.product order, last knob
+        fastest): per-knob encoded value columns over a broadcast ``start``
+        base, ``chunk`` candidates per slice."""
         knobs = list(self.space)
         counts = [len(self.space[k]) for k in knobs]
         total = int(np.prod(counts)) if knobs else 1
@@ -290,8 +307,6 @@ class Explorer:
             stride *= n
         cols = {k: encode_tunable_values(k, self.space[k]) for k in knobs}
         base = tunables_to_arrays([start])
-        counter, trace = [0], self._new_trace()
-        best_idx, best_cost = -1, math.inf
         for lo in range(0, total, self.chunk):
             hi = min(lo + self.chunk, total)
             idx = np.arange(lo, hi)
@@ -299,6 +314,17 @@ class Explorer:
                    for name, arr in base.items()}
             for k, n in zip(knobs, counts):
                 soa[k] = cols[k][(idx // strides[k]) % n]
+            yield lo, soa
+
+    def _exhaustive_arrays(self, arrays_fn, start: Tunables) -> SearchResult:
+        """Grid streaming over the struct-of-arrays codec, one vectorized
+        cost dispatch per chunk.  The trace records improving chunk winners
+        only (the full per-candidate log would cost exactly the Python loop
+        this path exists to avoid)."""
+        counter, trace = [0], self._new_trace()
+        best_idx, best_cost = -1, math.inf
+        for lo, soa in self._grid_chunks(start):
+            hi = lo + len(next(iter(soa.values())))
             costs = np.asarray(arrays_fn(soa)).reshape(-1)
             if len(costs) != hi - lo:
                 raise ValueError(
@@ -312,6 +338,82 @@ class Explorer:
                 trace.append((self._decode_index(start, best_idx).as_dict(),
                               best_cost))
         best = self._decode_index(start, best_idx) if best_idx >= 0 else None
+        return SearchResult(best, best_cost, counter[0], list(trace))
+
+    def model_ranked_exhaustive(self, objective, start: Tunables,
+                                predict_fn, *, max_evals: int,
+                                refine: bool = True) -> SearchResult:
+        """Model-guided budgeted grid search (ROADMAP item 4).
+
+        Rank phase: ``predict_fn`` (a trained ``CostModel.predict_arrays``)
+        prices the WHOLE grid as struct-of-arrays chunks — model inference
+        only, zero real measurements.  Probe phase: the best-predicted
+        candidates are measured for real (memoised, batched when the
+        objective offers the protocol) in predicted order and committed
+        with the same first-improving strict rule as every other search.
+        Refine phase (``refine=True``): neighbour-ring hill-climb from the
+        measured winner, sharing the probe budget.  Real measurements are
+        hard-capped at ``max_evals`` (memo hits stay free);
+        ``SearchResult.evaluations`` counts real measurements only."""
+        total = self.grid_size()
+        max_evals = max(1, min(int(max_evals), total))
+        preds = np.empty(total, np.float64)
+        for lo, soa in self._grid_chunks(start):
+            n = len(next(iter(soa.values())))
+            got = np.asarray(predict_fn(soa)).reshape(-1)
+            if len(got) != n:
+                raise ValueError(
+                    f"predict_fn returned {len(got)} predictions for a "
+                    f"{n}-candidate chunk")
+            preds[lo:lo + n] = got
+        order = np.argsort(preds, kind="stable")   # ties -> lower grid index
+        probe = max_evals if not refine else max(1, -(-max_evals // 2))
+        use_batch = self._use_batch(objective, None)
+        counter, trace = [0], self._new_trace()
+        best, best_cost = None, math.inf
+        cands = [self._decode_index(start, int(i)) for i in order[:probe]]
+        for i in range(0, len(cands), self.chunk):
+            block = cands[i:i + self.chunk]
+            costs = (self._eval_batch(objective, block, counter, trace)
+                     if use_batch else
+                     [self._eval(objective, c, counter, trace)
+                      for c in block])
+            for cand, c in zip(block, costs):
+                if c < best_cost:
+                    best, best_cost = cand, c
+        improved = refine
+        while improved and counter[0] < max_evals:
+            improved = False
+            ring = []
+            for knob, values in self.space.items():
+                cur = getattr(best, knob)
+                if cur not in values:
+                    continue
+                i = values.index(cur)
+                for j in (i - 1, i + 1):
+                    if 0 <= j < len(values):
+                        ring.append(best.replace(**{knob: values[j]}))
+            # trim the ring so unmemoised measurements never exceed the
+            # budget (memo hits are free and always kept)
+            room = max_evals - counter[0]
+            block, misses, seen = [], 0, set()
+            for c in ring:
+                k = self._key(c)
+                if k in self._memo:
+                    block.append(c)
+                elif k not in seen and misses < room:
+                    seen.add(k)
+                    misses += 1
+                    block.append(c)
+            if not block:
+                break
+            costs = (self._eval_batch(objective, block, counter, trace)
+                     if use_batch else
+                     [self._eval(objective, c, counter, trace)
+                      for c in block])
+            for cand, c in zip(block, costs):
+                if c < best_cost - 1e-12:
+                    best, best_cost, improved = cand, c, True
         return SearchResult(best, best_cost, counter[0], list(trace))
 
     def _decode_index(self, start: Tunables, index: int) -> Tunables:

@@ -62,7 +62,15 @@ from repro.core.characterize import l2_drift, merge_characterizations
 
 UNKNOWN = -1
 
-DB_FORMAT_VERSION = 2           # save() format; load() migrates v1 forward
+DB_FORMAT_VERSION = 3           # save() format; load() migrates v1/v2 forward
+#   v3 adds the per-record Plan-model state: bounded ``trace`` rows
+#   (measured (config, cost) pairs from SearchResult.trace) and the
+#   ``sensitivity`` knob ranking — absent fields default on load, so v2
+#   databases migrate forward for free
+
+# per-record bound on stored trace rows (newest kept) — the cost-model
+# training set for one workload class
+TRACE_BOUND = 512
 
 # journal bound for standalone (session-less) use: KermitSession drains the
 # journal every analysis, but a bare WorkloadDB driven forever must not
@@ -135,6 +143,8 @@ class WorkloadRecord:
     drift_score: float = 0.0              # EMA of observed drift distances
     origin_mean: Optional[np.ndarray] = None   # anchor for divergence checks
     tenant: Optional[int] = None          # fleet owner; None = single-tenant
+    trace: list = field(default_factory=list)  # [[config, cost], ...] bounded
+    sensitivity: Optional[dict] = None    # knob -> main effect (costmodel)
 
 
 _RECORD_FIELDS = {f.name for f in dataclasses.fields(WorkloadRecord)}
@@ -151,7 +161,8 @@ class WorkloadDB:
                  impl: str = "auto",
                  drift_alpha: float = 0.0,
                  merge_eps: float = 0.0,
-                 max_records: int = 1024):
+                 max_records: int = 1024,
+                 max_stored_trace: int = TRACE_BOUND):
         self.root = Path(root) if root else None
         self.records: dict[int, WorkloadRecord] = {}
         self.aliases: dict[int, int] = {}     # merged label -> surviving label
@@ -160,6 +171,7 @@ class WorkloadDB:
         self.drift_alpha = drift_alpha
         self.merge_eps = merge_eps
         self.max_records = max_records
+        self.max_stored_trace = max_stored_trace
         self.impl = "legacy" if impl in ("legacy", "seed") else "fast"
         self.matcher = matcher or ChangeDetector(alpha=0.001, quorum=0.5)
         self._journal: list[dict] = []        # drained by KermitSession
@@ -411,6 +423,34 @@ class WorkloadDB:
     def get(self, label: int) -> Optional[WorkloadRecord]:
         return self.records.get(self.resolve(label))
 
+    # -- Plan-model state (see core/costmodel.py) --------------------------
+
+    def record_trace(self, label: int, rows) -> None:
+        """Append measured ``(config, cost)`` rows (a SearchResult.trace)
+        to the record's bounded history — the cost-model training set.
+        Deliberately does NOT touch ``updated_at``: storing evidence must
+        not perturb the eviction order a search would otherwise leave."""
+        rec = self.records[self.resolve(label)]
+        for cfg, cost in rows:
+            rec.trace.append([dict(cfg), float(cost)])
+        if len(rec.trace) > self.max_stored_trace:
+            del rec.trace[:len(rec.trace) - self.max_stored_trace]
+
+    def get_trace(self, label: int) -> list:
+        rec = self.records.get(self.resolve(label))
+        return [] if rec is None else [(dict(c), float(v))
+                                       for c, v in rec.trace]
+
+    def set_sensitivity(self, label: int, sens: dict) -> None:
+        rec = self.records[self.resolve(label)]
+        rec.sensitivity = {str(k): float(v) for k, v in sens.items()}
+
+    def get_sensitivity(self, label: int) -> Optional[dict]:
+        rec = self.records.get(self.resolve(label))
+        if rec is None or rec.sensitivity is None:
+            return None
+        return dict(rec.sensitivity)
+
     def nearest_config(self, char: dict, *, exclude_label: int | None = None,
                        tenant: int | None = None,
                        impl: str | None = None) -> Optional[tuple]:
@@ -531,6 +571,12 @@ class WorkloadDB:
                 (new.has_optimal and not old.has_optimal)):
             old.config = new.config
             old.has_optimal = new.has_optimal
+        # absorbed measurement evidence survives the merge (bounded)
+        old.trace += new.trace
+        if len(old.trace) > self.max_stored_trace:
+            del old.trace[:len(old.trace) - self.max_stored_trace]
+        if old.sensitivity is None:
+            old.sensitivity = new.sensitivity
         old.updated_at = time.time()
         self.aliases[new.label] = old.label
         # aliases that pointed at the absorbed label re-target the survivor

@@ -17,7 +17,15 @@ bundle). Reads the latest workload context from the monitor stream, then:
                                   Explorer.global_search from J^D when the
                                   knowledge base holds no configuration yet
 
-and updates WorkloadDB with the result. Context staleness is measured in
+With ``model_guided`` on (PlanConfig.model_guided), the no-config branch
+first tries the learned Plan path: a jitted cost model trained on the
+record's stored ``SearchResult.trace`` rows ranks the grid, significance
+analysis pins the knobs that don't matter, and the model's winner is only
+committed after a real measurement confirms no regression vs the incumbent
+— cold or mistrusted models fall back to the PR 4 batched searches (see
+``core/costmodel.py`` and ``Explorer.model_ranked_exhaustive``).
+
+Updates WorkloadDB with the result. Context staleness is measured in
 *windows* — how far the stream has advanced past the context being acted on
 — against ``max_staleness_windows``; stale contexts log an error and fall
 back to default.  The window count comes from an injectable ``clock``
@@ -33,7 +41,7 @@ from dataclasses import dataclass
 from typing import Callable, Optional
 
 from repro.configs.base import DEFAULT_TUNABLES, Tunables
-from repro.core.explorer import Explorer
+from repro.core.explorer import Explorer, SearchResult
 from repro.core.knowledge import UNKNOWN, WorkloadDB
 from repro.core.monitor import KermitMonitor, WorkloadContext
 
@@ -62,6 +70,8 @@ class PluginStats:
     stale_contexts: int = 0
     failed_searches: int = 0
     evaluations: int = 0
+    model_searches: int = 0      # committed through the model-guided path
+    model_fallbacks: int = 0     # model cold/mistrusted -> PR 4 path
 
 
 class KermitPlugin:
@@ -71,6 +81,11 @@ class KermitPlugin:
                  max_staleness_windows: int = 256,
                  clock: Optional[Callable[[], int]] = None,
                  warm_start: bool = True,
+                 model_guided: bool = False,
+                 significance: float = 0.0,
+                 regret_bound: float = 0.25,
+                 min_trace: int = 32,
+                 eval_budget: float = 0.10,
                  max_staleness_s: float = _UNSET):
         self.db = db
         self.monitor = monitor
@@ -79,6 +94,16 @@ class KermitPlugin:
         self.max_staleness_windows = max_staleness_windows
         self.clock = clock
         self.warm_start = warm_start
+        # model-based Plan knobs (PlanConfig.model_guided et al.); the
+        # learned path is opt-in — OFF reproduces the PR 4 searches
+        # bit-identically
+        self.model_guided = model_guided
+        self.significance = significance
+        self.regret_bound = regret_bound
+        self.min_trace = min_trace
+        self.eval_budget = eval_budget
+        self._cost_model = None      # last trained CostModel (checkpointed)
+        self._model_label = None     # workload it was trained for
         if max_staleness_s is not _UNSET:
             warnings.warn(
                 "KermitPlugin(max_staleness_s=...) is deprecated and ignored "
@@ -184,6 +209,12 @@ class KermitPlugin:
             return self.default
         self.stats.evaluations += res.evaluations
         self.db.set_config(label, res.best.as_dict(), optimal=True)
+        # bank the measured evidence: future searches on this class train
+        # the Plan cost model from it (harmless bookkeeping when the DB
+        # lacks the surface, e.g. bare-dict test doubles)
+        record_trace = getattr(self.db, "record_trace", None)
+        if record_trace is not None and res.trace:
+            record_trace(label, res.trace)
         self.db.save()
         return res.best
 
@@ -193,29 +224,95 @@ class KermitPlugin:
             res = self.explorer.local_search(
                 objective, self._snap_to_space(rec.config))
             self.stats.local_searches += 1
-        else:
-            # warm start: a workload re-observed under a fresh label, or one
-            # a ZSL hybrid anticipated, should not search from scratch —
-            # seed from the nearest stored configuration instead.  The own
-            # label is deliberately NOT excluded: reaching this branch means
-            # rec has no optimal, but a stored non-optimal own config (a
-            # distance-0 match) is the best possible start
-            near = (self.db.nearest_config(rec.characterization)
-                    if self.warm_start else None)
-            if near is not None:
-                warm_cfg, _, dist = near
-                self.stats.warm_starts += 1
-                if dist <= self.db.drift_eps:
-                    # statistically the same workload: its optimum is a
-                    # neighbour away at most — refine locally
-                    res = self.explorer.local_search(
-                        objective, self._snap_to_space(warm_cfg))
-                    self.stats.local_searches += 1
-                else:
-                    res = self.explorer.global_search(
-                        objective, self._snap_to_space(warm_cfg))
-                    self.stats.global_searches += 1
+            return res
+        # warm start: a workload re-observed under a fresh label, or one
+        # a ZSL hybrid anticipated, should not search from scratch —
+        # seed from the nearest stored configuration instead.  The own
+        # label is deliberately NOT excluded: reaching this branch means
+        # rec has no optimal, but a stored non-optimal own config (a
+        # distance-0 match) is the best possible start
+        near = (self.db.nearest_config(rec.characterization)
+                if self.warm_start else None)
+        if self.model_guided:
+            res = self._model_search(objective, rec, near)
+            if res is not None:
+                return res
+            self.stats.model_fallbacks += 1
+        if near is not None:
+            warm_cfg, _, dist = near
+            self.stats.warm_starts += 1
+            if dist <= self.db.drift_eps:
+                # statistically the same workload: its optimum is a
+                # neighbour away at most — refine locally
+                res = self.explorer.local_search(
+                    objective, self._snap_to_space(warm_cfg))
+                self.stats.local_searches += 1
             else:
-                res = self.explorer.global_search(objective, self.default)
+                res = self.explorer.global_search(
+                    objective, self._snap_to_space(warm_cfg))
                 self.stats.global_searches += 1
+        else:
+            res = self.explorer.global_search(objective, self.default)
+            self.stats.global_searches += 1
         return res
+
+    def _model_search(self, objective, rec, near):
+        """The learned Plan path (ROADMAP item 4): train a cost model on
+        stored trace rows (own record first, warm-start donor's as extra
+        evidence), prune the space to the significant knobs, probe the
+        model's ranking under the evaluation budget, and commit only after
+        a real measurement confirms no regression vs the incumbent
+        (OnlineTune-style safety).  Returns None — "fall back to the PR 4
+        batched paths" — when the model is cold (too few trace rows),
+        mispredicts its own winner past ``regret_bound``, or loses to the
+        incumbent."""
+        from repro.core.costmodel import (CostModel, knob_sensitivity,
+                                          significant_knobs)
+        label = self._memo_label
+        rows = list(self.db.get_trace(label))
+        if near is not None and near[1] != label:
+            rows += self.db.get_trace(near[1])   # donor evidence transfers
+        if len(rows) < self.min_trace:
+            return None                          # cold model
+        space = self.explorer.space
+        sens = knob_sensitivity(rows, space)
+        self.db.set_sensitivity(label, sens)
+        keep = significant_knobs(sens, space, self.significance)
+        if near is not None:
+            incumbent = self._snap_to_space(near[0])
+        elif rec.config is not None:
+            incumbent = self._snap_to_space(rec.config)
+        else:
+            incumbent = self.default
+        ex = (self.explorer.subspace(keep) if len(keep) < len(space)
+              else self.explorer)
+        model = CostModel(ex.space)
+        try:
+            model.fit(rows)
+        except ValueError:                       # rows don't cover the space
+            return None
+        self._cost_model, self._model_label = model, label
+        budget = max(1, int(self.eval_budget * self.explorer.grid_size()))
+        res = ex.model_ranked_exhaustive(objective, incumbent,
+                                         model.predict_arrays,
+                                         max_evals=budget)
+        # safety gate 1 — calibration: a model that misprices its own
+        # committed winner is not to be trusted for ranking either
+        predicted = float(model.predict([res.best])[0])
+        scale = max(abs(predicted), abs(res.cost), 1e-9)
+        # safety gate 2 — no regression: the winner must measure no worse
+        # than the incumbent (evaluated through the same memo, so a probed
+        # incumbent is free)
+        counter, tr = [0], ex._new_trace()
+        incumbent_cost = ex._eval(objective, incumbent, counter, tr)
+        evaluations = res.evaluations + counter[0]
+        if (abs(res.cost - predicted) > self.regret_bound * scale
+                or res.cost > incumbent_cost + 1e-12):
+            # wasted probes still happened — account them, then fall back
+            self.stats.evaluations += evaluations
+            return None
+        self.stats.model_searches += 1
+        if near is not None:
+            self.stats.warm_starts += 1
+        return SearchResult(res.best, res.cost, evaluations,
+                            res.trace + list(tr))

@@ -101,6 +101,21 @@ class PlanConfig:
     warm_start: bool = True          # seed searches from nearest stored config
     max_staleness_windows: int = 256  # pull-path staleness guard (windows)
     default_tunables: Optional[dict] = None  # J^D override; None -> defaults
+    # model-based Plan (core/costmodel.py — ROADMAP item 4).  All defaults
+    # keep the learned path OFF: model_guided=False reproduces the PR 4
+    # batched searches bit-identically (winner, cost, evaluation count).
+    model_guided: bool = False       # rank the grid with a learned cost model
+    significance: float = 0.0        # prune knobs w/ main effect < frac of max
+    #                                  (0 = no pruning; Tuneful-style)
+    regret_bound: float = 0.25       # model-mistrust bound: committed-winner
+    #                                  relative misprediction above this falls
+    #                                  back to the PR 4 paths (also the
+    #                                  oracle-differential harness's asserted
+    #                                  regret bound)
+    min_trace: int = 32              # stored trace rows before the model is
+    #                                  trusted (cold model -> PR 4 fallback)
+    eval_budget: float = 0.10        # measured evals <= budget * grid size
+    #                                  on the model-guided path
 
 
 @dataclass(frozen=True)

@@ -207,6 +207,30 @@ class TenantDBView:
             return cfg, g, dist
         return cfg, self._g2l.get(g, g), dist
 
+    def _donor_global(self, label: int) -> int:
+        """Resolve a label the plugin got back from ``nearest_config``:
+        a cross-tenant donor surfaces its *global* label (reported via
+        ``last_foreign_donor``), anything else is local."""
+        if label == self.last_foreign_donor:
+            return label
+        g = self._l2g.get(label)
+        return label if g is None else g
+
+    def record_trace(self, label: int, rows) -> None:
+        self.db.record_trace(self._l2g[label], rows)
+
+    def get_trace(self, label: int) -> list:
+        """Stored trace rows; accepts a foreign donor's global label, so
+        warm-transfer donors ship their measurement evidence (and hence
+        sensitivity rankings) across tenants."""
+        return self.db.get_trace(self._donor_global(label))
+
+    def set_sensitivity(self, label: int, sens: dict) -> None:
+        self.db.set_sensitivity(self._l2g[label], sens)
+
+    def get_sensitivity(self, label: int) -> Optional[dict]:
+        return self.db.get_sensitivity(self._donor_global(label))
+
     def find_synthetic(self, combo: tuple) -> Optional[int]:
         try:
             gcombo = tuple(sorted(self._l2g[c] for c in combo))
@@ -428,7 +452,10 @@ class KermitFleet:
                          max_memo=pc.max_memo, max_trace=pc.max_trace,
                          chunk=pc.chunk),
                 default, max_staleness_windows=pc.max_staleness_windows,
-                clock=base.clock, warm_start=pc.warm_start)
+                clock=base.clock, warm_start=pc.warm_start,
+                model_guided=pc.model_guided, significance=pc.significance,
+                regret_bound=pc.regret_bound, min_trace=pc.min_trace,
+                eval_budget=pc.eval_budget)
             bind = getattr(ex, "bind_clock", None)
             if callable(bind):
                 bind(lambda: 0 if self.ring is None else self.ring.total)

@@ -45,9 +45,13 @@ from repro.runtime.checkpoint import load_snapshot, save_snapshot
 # -- durable-session snapshot schema ----------------------------------------
 
 CHECKPOINT_FORMAT = "kermit-session"
-CHECKPOINT_VERSION = 1
+CHECKPOINT_VERSION = 2
+#   v2 adds the Plan-model state inside the "plugin" section: the trained
+#   cost-model parameters + the label it was fitted for ("plan" subkey).
+#   Per-record knob-sensitivity rankings travel inside the embedded
+#   WorkloadDB state (its own v3 format).
 
-# every top-level meta field version 1 defines; restore rejects snapshots
+# every top-level meta field version 2 defines; restore rejects snapshots
 # carrying fields outside this set so a schema change can never be read
 # silently as something else (mirrors WorkloadDB's versioned format)
 _META_FIELDS = frozenset({
@@ -67,7 +71,19 @@ def _migrate_v0(meta: dict) -> dict:
     return meta
 
 
-_MIGRATIONS = {0: _migrate_v0}
+def _migrate_v1(meta: dict) -> dict:
+    """v1 -> v2: the Plan phase gained a learned cost model; pre-model
+    snapshots restore with an untrained one (the plugin's cold-model
+    fallback covers the first post-restore searches)."""
+    meta = dict(meta)
+    plug = dict(meta.get("plugin") or {})
+    plug.setdefault("plan", {"model": None, "label": None})
+    meta["plugin"] = plug
+    meta["version"] = 2
+    return meta
+
+
+_MIGRATIONS = {0: _migrate_v0, 1: _migrate_v1}
 
 
 def _validate_checkpoint_meta(meta: dict) -> dict:
@@ -136,7 +152,10 @@ class KermitSession:
                                  max_memo=pc.max_memo,
                                  max_trace=pc.max_trace, chunk=pc.chunk),
             default, max_staleness_windows=pc.max_staleness_windows,
-            clock=cfg.clock, warm_start=pc.warm_start)
+            clock=cfg.clock, warm_start=pc.warm_start,
+            model_guided=pc.model_guided, significance=pc.significance,
+            regret_bound=pc.regret_bound, min_trace=pc.min_trace,
+            eval_budget=pc.eval_budget)
 
         self.executor = executor
         self._bind_chaos(executor)
@@ -466,7 +485,12 @@ class KermitSession:
             "models": models,
             "plugin": {"stats": vars(self.plugin.stats).copy(),
                        "memo_label": self.plugin._memo_label,
-                       "memo": self.plugin.explorer.export_memo()},
+                       "memo": self.plugin.explorer.export_memo(),
+                       "plan": {
+                           "model": (self.plugin._cost_model.export_state()
+                                     if self.plugin._cost_model is not None
+                                     else None),
+                           "label": self.plugin._model_label}},
             "knowledge": {"db": self.db.to_state(),
                           "journal": [dict(e) for e in self.db._journal]},
             "executor": self._export_executor_state(),
@@ -522,6 +546,11 @@ class KermitSession:
         session.plugin.stats = PluginStats(**plug["stats"])
         session.plugin._memo_label = plug["memo_label"]
         session.plugin.explorer.restore_memo(plug["memo"])
+        plan = plug.get("plan") or {}
+        if plan.get("model") is not None:
+            from repro.core.costmodel import CostModel
+            session.plugin._cost_model = CostModel.from_state(plan["model"])
+            session.plugin._model_label = plan.get("label")
 
         s = meta["session"]
         session.current = Tunables(**s["current"])

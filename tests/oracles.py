@@ -1,0 +1,83 @@
+"""Reusable oracle helpers for differential-testing Plan-phase searches.
+
+The ground truth for every search strategy is the brute-force exhaustive
+oracle: enumerate the full grid in ``itertools.product`` order, commit the
+first strict minimum.  ``tests/test_plan_model.py`` asserts each strategy's
+committed winner against it (exact for exhaustive paths, within a regret
+bound for budgeted/model-guided ones) and checks evaluation budgets.
+"""
+import itertools
+import math
+
+import numpy as np
+
+from repro.configs.base import DEFAULT_TUNABLES
+
+
+def grid_size(space: dict) -> int:
+    return int(np.prod([len(v) for v in space.values()])) if space else 1
+
+
+def grid_iter(space: dict, start=DEFAULT_TUNABLES):
+    """Every grid point as Tunables, itertools.product order (the same
+    enumeration order Explorer.exhaustive and _grid_chunks use)."""
+    knobs = list(space)
+    for combo in itertools.product(*(space[k] for k in knobs)):
+        yield start.replace(**dict(zip(knobs, combo)))
+
+
+def exhaustive_oracle(objective, space: dict, start=DEFAULT_TUNABLES):
+    """Brute-force reference: (winner, true cost), first strict minimum in
+    enumeration order — the tie-break every Explorer path reproduces."""
+    best, best_cost = None, math.inf
+    for tun in grid_iter(space, start):
+        c = float(objective(tun))
+        if c < best_cost:
+            best, best_cost = tun, c
+    return best, best_cost
+
+
+def seeded_objective(seed: int, space: dict, *, quantize: int = 0):
+    """A deterministic separable objective over ``space``: each knob value
+    draws an independent weight from ``seed`` and a candidate's cost is the
+    sum over its knobs.  ``quantize`` > 0 coarsens weights onto a 1/q grid
+    (tie stress for commit-rule parity tests)."""
+    rng = np.random.default_rng(seed)
+    weights = {}
+    for knob, values in space.items():
+        w = rng.uniform(0.0, 1.0, size=len(values))
+        if quantize:
+            w = np.round(w * quantize) / quantize
+        weights[knob] = {v: float(wv) for v, wv in zip(values, w)}
+
+    def objective(tun):
+        return sum(weights[k][getattr(tun, k)] for k in weights)
+
+    return objective
+
+
+class RecordingObjective:
+    """Wraps an objective and records every candidate it was asked to
+    price — including batched dispatches — for pinned-knob assertions."""
+
+    def __init__(self, fn):
+        self.fn = fn
+        self.calls = []
+
+    def __call__(self, tun):
+        self.calls.append(tun)
+        return self.fn(tun)
+
+    def batch(self, cands):
+        self.calls.extend(cands)
+        return [self.fn(c) for c in cands]
+
+
+def assert_within_regret(cost: float, oracle_cost: float, bound: float):
+    """Committed-winner true cost within ``bound`` relative regret of the
+    exhaustive oracle's."""
+    scale = max(abs(oracle_cost), 1e-12)
+    regret = (cost - oracle_cost) / scale
+    assert regret <= bound + 1e-12, (
+        f"winner cost {cost} exceeds oracle {oracle_cost} by relative "
+        f"regret {regret:.4f} > bound {bound}")

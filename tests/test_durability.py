@@ -260,6 +260,61 @@ def test_unmigratable_version_rejected(tmp_path):
         KermitSession.restore(snap)
 
 
+def test_checkpoint_roundtrip_plan_model_state(tmp_path):
+    """v2 schema: the trained Plan cost model + per-record trace and
+    sensitivity state survive checkpoint/restore bit-identically."""
+    from repro.core.costmodel import CostModel, knob_sensitivity
+    from repro.configs.base import DEFAULT_TUNABLES
+
+    ex, chaos = _stack(n_windows=10)
+    s = KermitSession(_cfg(), executor=ex)
+    s.step_batch(chaos.samples)
+    # bank model state the way a model-guided search would
+    rng = np.random.default_rng(0)
+    rows = []
+    explorer = s.plugin.explorer
+    for i in rng.choice(explorer.grid_size(), 10, replace=False):
+        t = explorer._decode_index(DEFAULT_TUNABLES, int(i))
+        rows.append((t.as_dict(), float(rng.uniform(1, 2))))
+    label = next(iter(s.db.records)) if s.db.records else s.db.insert(
+        {"mean": np.ones(4, np.float32), "std": np.ones(4, np.float32),
+         "n": 8})
+    s.db.record_trace(label, rows)
+    s.db.set_sensitivity(label, knob_sensitivity(rows, SPACE))
+    s.plugin._cost_model = CostModel(SPACE, epochs=60).fit(rows)
+    s.plugin._model_label = label
+
+    snap = tmp_path / "snap.npz"
+    s.checkpoint(snap)
+    r = KermitSession.restore(snap, executor=_stack(n_windows=10)[0])
+
+    assert r.plugin._model_label == label
+    probe = [DEFAULT_TUNABLES, DEFAULT_TUNABLES.replace(microbatches=4)]
+    assert np.array_equal(r.plugin._cost_model.predict(probe),
+                          s.plugin._cost_model.predict(probe))
+    assert r.db.get_trace(label) == s.db.get_trace(label)
+    assert r.db.get_sensitivity(label) == s.db.get_sensitivity(label)
+
+
+def test_v1_forward_migration_defaults_plan_state(tmp_path):
+    """A v1 (pre-model) snapshot restores through the v1 -> v2 migration:
+    the plugin comes back with an untrained (None) cost model and the
+    RESTORE event reports the post-migration version."""
+    snap = _checkpointed(tmp_path)
+
+    def downgrade(m):
+        m["version"] = 1
+        del m["plugin"]["plan"]
+    _rewrite_meta(snap, downgrade)
+    s = KermitSession.restore(snap)
+    restore_ev = s.events[-1]
+    assert restore_ev.kind == EventKind.RESTORE.value
+    assert restore_ev.detail["version"] == CHECKPOINT_VERSION
+    assert s.plugin._cost_model is None
+    assert s.plugin._model_label is None
+    assert s.monitor.windows_emitted == 10
+
+
 # ---------------------------------------------------------------------------
 # deterministic retry jitter
 # ---------------------------------------------------------------------------

@@ -67,3 +67,81 @@ def test_local_search_stays_on_grid(seed):
     for k, vals in SPACE.items():
         assert getattr(res.best, k) in vals
     assert res.cost <= obj(start) + 1e-12
+
+
+# -- model-based Plan invariants (core/costmodel.py) ------------------------
+
+
+def _trace_from_seed(seed, n=48):
+    """Measured rows over the whole grid (ground truth for fit/rank)."""
+    obj, _ = _objective_from_seed(seed)
+    ex = Explorer(SPACE)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for i in rng.choice(ex.grid_size(), size=min(n, ex.grid_size()),
+                        replace=False):
+        t = ex._decode_index(DEFAULT_TUNABLES, int(i))
+        rows.append((t.as_dict(), float(obj(t))))
+    return obj, rows
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.randoms(use_true_random=False))
+def test_costmodel_fit_permutation_invariant(seed, rnd):
+    """Train/predict must be bit-identical under ANY ordering of the trace
+    (the canonicalized training-set contract)."""
+    from repro.core.costmodel import CostModel
+    obj, rows = _trace_from_seed(seed)
+    shuffled = list(rows)
+    rnd.shuffle(shuffled)
+    # few epochs: invariance is a property of canonicalization, not of
+    # training length, and CI runs 20 examples of this
+    m1 = CostModel(SPACE, epochs=60).fit(rows)
+    m2 = CostModel(SPACE, epochs=60).fit(shuffled)
+    probe = [DEFAULT_TUNABLES,
+             DEFAULT_TUNABLES.replace(remat="full", microbatches=8,
+                                      attn_q_chunk=2048)]
+    assert np.array_equal(m1.predict(probe), m2.predict(probe))
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.floats(min_value=1e-3, max_value=1e3,
+                 allow_nan=False, allow_infinity=False))
+def test_sensitivity_ranking_stable_under_cost_scaling(seed, scale):
+    """Positive rescaling of the costs must never invert a knob ranking."""
+    from repro.core.costmodel import knob_sensitivity
+    _, rows = _trace_from_seed(seed)
+    s1 = knob_sensitivity(rows, SPACE)
+    s2 = knob_sensitivity([(cfg, scale * cost) for cfg, cost in rows],
+                          SPACE)
+    assert set(s1) == set(s2)
+    for a in s1:
+        for b in s1:
+            if s1[a] < s1[b]:
+                assert s2[a] <= s2[b]
+
+
+@given(st.integers(0, 2 ** 31 - 1),
+       st.sets(st.sampled_from(sorted(SPACE)), min_size=1,
+               max_size=len(SPACE) - 1))
+def test_pruned_search_never_evaluates_pinned_knob_off_value(seed, keep):
+    """A significance-pruned (subspace) search must hold every pinned knob
+    at its start value in EVERY candidate it prices."""
+    obj, _ = _objective_from_seed(seed)
+    ex = Explorer(SPACE).subspace(keep)
+    start = DEFAULT_TUNABLES.replace(remat="full", microbatches=4,
+                                     attn_q_chunk=2048)
+    seen = []
+
+    def recording(t):
+        seen.append(t)
+        return obj(t)
+
+    for search in (ex.global_search, ex.local_search,
+                   lambda o, s: ex.exhaustive(o, s, batched=False)):
+        seen.clear()
+        search(recording, start)
+        assert seen
+        for cand in seen:
+            for k in SPACE:
+                if k not in keep:
+                    assert getattr(cand, k) == getattr(start, k)

@@ -160,7 +160,11 @@ def test_elastic_restore_onto_shrunk_mesh(tmp_path):
     1-device mesh (subprocess: device count is fixed at jax import)."""
     repo = Path(__file__).resolve().parents[1]
     env = dict(os.environ, PYTHONPATH=str(repo / "src") + os.pathsep
-               + str(repo))
+               + str(repo),
+               # hosts with an accelerator plugin installed probe device
+               # metadata at import — pin the subprocess to CPU (the same
+               # guard tests/test_pipeline.py applies)
+               JAX_PLATFORMS="cpu")
     env.pop("XLA_FLAGS", None)
     proc = subprocess.run(
         [sys.executable, "-c", _SHRINK_SCRIPT, str(repo / "src"),

@@ -2,6 +2,10 @@
 transparency and perturbations, ResilientExecutor parity/degradation, the
 straggler self-healing gate end to end, artifact schema, regression gate."""
 import json
+import os
+import subprocess
+import sys
+from pathlib import Path
 
 import numpy as np
 import pytest
@@ -379,6 +383,34 @@ def test_session_emits_typed_fault_and_recovery_events(smoke_summary):
     last = recoveries[-1].detail
     assert last["recovered"] and last["throughput_ratio"] >= 0.9
     assert {"pre_fault_cost", "post_cost", "fault"} <= set(last)
+
+
+# ---------------------------------------------------------------------------
+# CLI entry point
+# ---------------------------------------------------------------------------
+
+
+def test_scenario_cli_subprocess_smoke(tmp_path):
+    """`python -m repro.scenarios` — the exact CI invocation — runs a cheap
+    scenario end to end in a fresh interpreter and writes the artifact
+    tree."""
+    repo = Path(__file__).resolve().parents[1]
+    env = dict(os.environ, PYTHONPATH=str(repo / "src") + os.pathsep
+               + str(repo),
+               # hosts with an accelerator plugin installed probe device
+               # metadata at import — pin the subprocess to CPU (the same
+               # guard tests/test_pipeline.py applies)
+               JAX_PLATFORMS="cpu")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.scenarios",
+         "--only", "transient_failures", "--seed", "0", "--impl", "auto",
+         "--out", str(tmp_path), "--run-id", "clirun"],
+        capture_output=True, text=True, env=env, cwd=repo, timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    summary = json.loads((tmp_path / "clirun" / "summary.json").read_text())
+    assert summary["all_ok"] and summary["run_id"] == "clirun"
+    assert [r["scenario"] for r in summary["runs"]] == ["transient_failures"]
 
 
 # ---------------------------------------------------------------------------
